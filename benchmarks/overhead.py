@@ -1,0 +1,70 @@
+"""Table 3 / Fig. 17a-b: profiling overhead on the real training loop.
+
+Measures iteration time with PerfTracker off / attached-idle / actively
+profiling, across model configs, plus the off-thread pattern-summarization
+and localization times (Fig. 17b)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.registry import ARCHS, reduced
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def _iter_time(trainer, steps=12, warmup=3):
+    params, opt_state, _ = trainer.init_state(resume=False)
+    import jax.numpy as jnp
+    times = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in trainer._next().items()}
+        t0 = time.perf_counter()
+        params, opt_state, m = trainer._jit_step(params, opt_state, b)
+        float(m["loss"])
+        if i >= warmup:
+            times.append(time.perf_counter() - t0)
+    trainer.loader.close()
+    return float(np.mean(times))
+
+
+def run():
+    rows = []
+    for arch, d_model, layers in [("granite-34b", 64, 2),
+                                  ("granite-34b", 128, 4),
+                                  ("deepseek-v2-lite-16b", 64, 3)]:
+        cfg = reduced(ARCHS[arch], d_model=d_model, layers=layers)
+        data = DataConfig(batch=4, seq_len=64)
+        base = Trainer(cfg, data, OptConfig(), TrainConfig(
+            steps=1, perftracker=False))
+        t_off = _iter_time(base)
+        with_pt = Trainer(cfg, data, OptConfig(), TrainConfig(
+            steps=1, perftracker=True, pt_window_s=0.5))
+        t_idle = _iter_time(with_pt)
+        # force a profiling window open during measurement
+        with_pt2 = Trainer(cfg, data, OptConfig(), TrainConfig(
+            steps=1, perftracker=True, pt_window_s=30.0))
+        with_pt2.pt.tracer.start_window()
+        t_prof = _iter_time(with_pt2)
+        prof = with_pt2.pt.tracer.stop_window()
+        t0 = time.perf_counter()
+        from repro.core.daemon import summarize_and_upload
+        up = summarize_and_upload(prof)
+        t_sum = time.perf_counter() - t0
+        tag = f"{arch}/d{d_model}xL{layers}"
+        rows.append((f"overhead/{tag}/train_s_iter", t_off * 1e6,
+                     f"baseline={t_off:.4f}s"))
+        rows.append((f"overhead/{tag}/attached_s_iter", t_idle * 1e6,
+                     f"delta={100*(t_idle/t_off-1):+.1f}%"))
+        rows.append((f"overhead/{tag}/profiling_s_iter", t_prof * 1e6,
+                     f"delta={100*(t_prof/t_off-1):+.1f}%"))
+        rows.append((f"overhead/{tag}/summarize_s", t_sum * 1e6,
+                     f"off-thread; {len(up.payload)}B patterns"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,62 @@
+"""§Roofline: emit the per-(arch x shape x mesh) roofline table from the
+dry-run artifacts in reports/dryrun/ (run launch.dryrun first)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path("reports/dryrun")
+
+
+def rows_from(mesh_dir: Path, tag_filter=""):
+    out = []
+    for f in sorted(mesh_dir.glob("*.json")):
+        r = json.loads(f.read_text())
+        if tag_filter and tag_filter not in f.stem:
+            continue
+        rl = r["roofline"]
+        out.append((
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            rl["step_time_bound_s"] * 1e6,
+            f"dom={rl['dominant']};tc={rl['t_compute_s']:.3f};"
+            f"tm={rl['t_memory_s']:.3f};tcoll={rl['t_collective_s']:.3f};"
+            f"useful={rl['useful_flops_ratio']:.3f};"
+            f"frac={rl['roofline_fraction']:.4f}"))
+    return out
+
+
+def run():
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        d = DRYRUN / mesh
+        if d.exists():
+            rows.extend(rows_from(d))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run: python -m repro.launch.dryrun --all --mesh both"))
+    return rows
+
+
+def markdown_table() -> str:
+    lines = ["| mesh | arch | shape | dominant | t_comp (s) | t_mem (s) "
+             "| t_coll (s) | useful | roofline |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ("16x16", "2x16x16"):
+        d = DRYRUN / mesh
+        if not d.exists():
+            continue
+        for f in sorted(d.glob("*.json")):
+            r = json.loads(f.read_text())
+            rl = r["roofline"]
+            lines.append(
+                f"| {r['mesh']} | {r['arch']} | {r['shape']} "
+                f"| {rl['dominant']} | {rl['t_compute_s']:.3f} "
+                f"| {rl['t_memory_s']:.3f} | {rl['t_collective_s']:.3f} "
+                f"| {rl['useful_flops_ratio']:.3f} "
+                f"| {rl['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+MODULES = [
+    ("detection", "Fig. 8/12: detection latency"),
+    ("pattern_size", "Fig. 11: pattern vs raw data size"),
+    ("ring_patterns", "Figs. 3/5: ring signatures"),
+    ("ability_matrix", "Table 4: ability matrix vs baselines"),
+    ("overhead", "Table 3 / Fig. 17a-b: profiling overhead"),
+    ("localization_scaling", "Fig. 17c: localization scaling"),
+    ("kernels_bench", "kernel micro-bench"),
+    ("roofline_table", "EXPERIMENTS §Roofline (from dry-run artifacts)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated module names")
+    ap.add_argument("--skip", default="", help="comma-separated module names")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+    skip = set(filter(None, args.skip.split(",")))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, desc in MODULES:
+        if only and name not in only:
+            continue
+        if name in skip:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                n, v, d = row
+                print(f"{n},{v:.1f},{d}", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: train a tiny LM with PerfTracker attached, inject a storage
+fault mid-run, watch the online diagnosis fire (paper case C2P1, live).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, reduced
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main():
+    cfg = reduced(ARCHS["gemma2-2b"], d_model=64, vocab=256)
+    trainer = Trainer(
+        cfg,
+        DataConfig(batch=4, seq_len=32),
+        OptConfig(lr_peak=5e-3, warmup_steps=5, total_steps=120),
+        TrainConfig(steps=120, log_every=20, perftracker=True,
+                    pt_window_s=0.3),
+    )
+    trainer.pt.service.detector.cfg.n_recent = 10
+
+    # inject the fault at step 60: data loading becomes 20x slower
+    orig_next = trainer.loader.next
+
+    def degrading_next():
+        if trainer.loader.step == 60:
+            print(">>> injecting slow-storage fault (case C2P1)")
+            trainer.loader.source.data.delay_s = 0.05
+        return orig_next()
+
+    trainer._next, _ = trainer.pt.wrap(degrading_next, lambda: None)
+    trainer.run()
+
+    res = trainer.pt.flush()
+    if res is None and trainer.pt.results:
+        res = trainer.pt.results[-1]
+    print()
+    if trainer.pt.service.detector.triggers:
+        t = trainer.pt.service.detector.triggers[0]
+        print(f"degradation detected: {t.reason} ({t.detail})")
+    if res is not None:
+        print(res.report())
+    else:
+        print("no diagnosis window completed (try more steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.ckpt.checkpoint import Checkpointer  # noqa: F401

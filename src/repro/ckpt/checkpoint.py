@@ -1,0 +1,157 @@
+"""Sharded checkpointing with async save and elastic restore (no orbax).
+
+Layout:  <dir>/step_<n>/
+           meta.json          — tree structure, shapes, dtypes, step, cfg
+           <flat_key>.npy     — one array per leaf (gathered logical value)
+
+* ``save`` gathers each (possibly sharded) array and writes it off-thread
+  (async) so the training loop is never blocked (paper Fig. 16's off-thread
+  summarization is the same pattern).
+* ``restore`` reads logical arrays and ``jax.device_put``s them with the
+  CURRENT mesh's shardings — the mesh may be a different shape/size than at
+  save time (elastic re-mesh after dropping hosts; DESIGN.md §4/§7).
+* On a real multi-host pod each host writes only its addressable shards;
+  the single-process container writes the full logical value. The format
+  (one file per leaf + JSON meta) is host-count independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXT_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+               "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+               "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _to_savable(v: np.ndarray) -> np.ndarray:
+    if v.dtype.name in _EXT_DTYPES:
+        return v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+    return v
+
+
+def _from_savable(v: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return v.view(_EXT_DTYPES[dtype_name])
+    return v
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def one(kp, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        flat[key] = leaf
+    jax.tree_util.tree_map_with_path(one, tree)
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    def one(kp, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        return arr
+    return jax.tree_util.tree_map_with_path(one, template)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.keep = keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+        self.last_save_s = 0.0
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             async_: bool = True):
+        """Gather + write. With async_, device->host copy happens inline
+        (cheap) and file IO goes to a background thread."""
+        self.wait()
+        flat = {k: np.asarray(jax.device_get(v))
+                for k, v in _flatten(tree).items()}
+        meta = {"step": step,
+                "extra": extra or {},
+                "leaves": {k: {"shape": list(v.shape),
+                               "dtype": str(v.dtype)}
+                           for k, v in flat.items()}}
+
+        def write():
+            t0 = time.perf_counter()
+            tmp = self.dir / f".tmp_step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for k, v in flat.items():
+                np.save(tmp / (k.replace("/", "__") + ".npy"),
+                        _to_savable(v))
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            final = self.dir / f"step_{step}"
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+            self.last_save_s = time.perf_counter() - t0
+
+        if async_:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, template, shardings=None
+                ) -> Tuple[Any, dict]:
+        """Restore into the current mesh: ``shardings`` (pytree matching
+        template) may come from a DIFFERENT mesh than at save time."""
+        self.wait()
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "meta.json").read_text())
+        flat = {}
+        for k, info in meta["leaves"].items():
+            arr = np.load(d / (k.replace("/", "__") + ".npy"))
+            flat[k] = _from_savable(arr, info["dtype"])
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s) if s is not None
+                else jax.device_put(x), tree, shardings)
+        else:
+            tree = jax.tree_util.tree_map(jax.device_put, tree)
+        return tree, meta

@@ -1,0 +1,10 @@
+"""PerfTracker core — the paper's contribution (see DESIGN.md §1).
+
+Pipeline: detector (§4.1) -> profiling window -> behavior patterns (§4.2,
+Algorithm 1) -> differential localization (§4.3) -> report + mitigation.
+"""
+from repro.core.detector import DetectorConfig, IterationDetector, Trigger  # noqa: F401
+from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile  # noqa: F401
+from repro.core.localizer import Localizer  # noqa: F401
+from repro.core.patterns import Pattern, critical_duration, summarize_worker  # noqa: F401
+from repro.core.service import PerfTrackerService  # noqa: F401

@@ -1,0 +1,89 @@
+"""Critical-path extraction (paper §4.2, Fig. 9).
+
+Priorities: GPU compute > memory ops > collective comm > Python. A function
+execution (or a subinterval of it) is on the critical path iff no
+higher-priority function is executing then. Python events must additionally
+be on the training thread and be LEAF frames (no child executing).
+
+Sweep-line over event boundaries; O((n log n)) in the number of events.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.events import FunctionEvent, Kind
+
+
+def critical_intervals(events: List[FunctionEvent],
+                       window: Tuple[float, float]
+                       ) -> Dict[int, List[Tuple[float, float]]]:
+    """Returns, per event index, the sub-intervals on the critical path."""
+    t0, t1 = window
+    # boundaries
+    pts = {t0, t1}
+    for e in events:
+        pts.add(max(t0, min(t1, e.start)))
+        pts.add(max(t0, min(t1, e.end)))
+    bounds = sorted(pts)
+    n_seg = len(bounds) - 1
+    if n_seg <= 0:
+        return {}
+
+    starts = np.array([max(t0, e.start) for e in events])
+    ends = np.array([min(t1, e.end) for e in events])
+    seg_lo = np.array(bounds[:-1])
+    seg_hi = np.array(bounds[1:])
+
+    # active[i, s] for event i, segment s (events << segments typical;
+    # vectorized interval containment)
+    active = (starts[:, None] <= seg_lo[None, :] + 1e-12) & \
+             (ends[:, None] >= seg_hi[None, :] - 1e-12)
+
+    kinds = np.array([int(e.kind) for e in events])
+    is_py = kinds == int(Kind.PYTHON)
+    train_thread = np.array([e.thread == "train" for e in events])
+    depth = np.array([e.depth for e in events])
+
+    # eligible python events: training thread only
+    eligible = np.ones(len(events), bool)
+    eligible[is_py & ~train_thread] = False
+
+    out: Dict[int, List[Tuple[float, float]]] = defaultdict(list)
+    for s in range(n_seg):
+        if seg_hi[s] - seg_lo[s] <= 0:
+            continue
+        act = np.where(active[:, s] & eligible)[0]
+        if act.size == 0:
+            continue
+        best_kind = kinds[act].min()
+        winners = act[kinds[act] == best_kind]
+        if best_kind == int(Kind.PYTHON):
+            # leaf frame: deepest call wins
+            dmax = depth[winners].max()
+            winners = winners[depth[winners] == dmax]
+        for i in winners:
+            out[int(i)].append((float(seg_lo[s]), float(seg_hi[s])))
+    # merge adjacent intervals per event
+    merged: Dict[int, List[Tuple[float, float]]] = {}
+    for i, ivs in out.items():
+        ivs.sort()
+        acc = [list(ivs[0])]
+        for lo, hi in ivs[1:]:
+            if lo <= acc[-1][1] + 1e-12:
+                acc[-1][1] = max(acc[-1][1], hi)
+            else:
+                acc.append([lo, hi])
+        merged[i] = [(a, b) for a, b in acc]
+    return merged
+
+
+def critical_time_by_function(events: List[FunctionEvent],
+                              window: Tuple[float, float]) -> Dict[str, float]:
+    ivs = critical_intervals(events, window)
+    out: Dict[str, float] = defaultdict(float)
+    for i, spans in ivs.items():
+        out[events[i].name] += sum(hi - lo for lo, hi in spans)
+    return dict(out)

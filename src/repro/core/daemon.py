@@ -1,0 +1,45 @@
+"""Per-worker PerfTracker daemon (paper §4, Fig. 6): receives the raw
+profiling window from its worker, summarizes runtime behavior patterns in a
+separate process/core (here: same process, separate function — the training
+thread is never blocked), and uploads only the ~KB pattern dict."""
+from __future__ import annotations
+
+import struct
+import time
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.core.events import Kind, WorkerProfile
+from repro.core.patterns import Pattern, summarize_worker
+
+
+@dataclass
+class PatternUpload:
+    worker: int
+    payload: bytes            # msgpack {name: (beta, mu, sigma, kind)}
+    summarize_s: float
+    raw_bytes: int
+
+    def unpack(self) -> Tuple[Dict[str, np.ndarray], Dict[str, Kind]]:
+        d = msgpack.unpackb(self.payload, strict_map_key=False)
+        pats = {k: np.array(v[:3], np.float32) for k, v in d.items()}
+        kinds = {k: Kind(v[3]) for k, v in d.items()}
+        return pats, kinds
+
+
+def summarize_and_upload(profile: WorkerProfile,
+                         kind_of: Dict[str, Kind] = None) -> PatternUpload:
+    t0 = time.perf_counter()
+    pats = summarize_worker(profile)
+    kinds: Dict[str, Kind] = dict(kind_of or {})
+    for e in profile.events:   # function kind comes from its events
+        kinds.setdefault(e.name, e.kind)
+    payload = msgpack.packb({
+        name: (p.beta, p.mu, p.sigma, int(kinds.get(name, Kind.PYTHON)))
+        for name, p in pats.items()})
+    return PatternUpload(worker=profile.worker, payload=payload,
+                         summarize_s=time.perf_counter() - t0,
+                         raw_bytes=profile.raw_size_bytes())

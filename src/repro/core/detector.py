@@ -1,0 +1,169 @@
+"""Performance-degradation detection (paper §4.1, Fig. 8).
+
+PerfTracker wraps exactly two anchors — ``dataloader.next()`` and
+``optimizer.step()`` — and, with no access to user code:
+
+ 1. *Iteration detection*: after M (=10) identical event sequences that start
+    with dataloader.next and end with optimizer.step, that sequence becomes
+    the training iteration sequence.
+ 2. *Degradation detection*: each matched iteration records a duration;
+    degradation fires when the mean of the last N (=50) durations exceeds the
+    recent minimum by >5%, or when the in-flight sequence stalls for at least
+    5x the average iteration duration (blockage).
+ 3. *Robustness*: K (=200) consecutive unmatched events re-enter iteration
+    detection.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+DATALOADER_NEXT = "dataloader.next"
+OPTIMIZER_STEP = "optimizer.step"
+
+
+@dataclass(frozen=True)
+class Trigger:
+    reason: str               # 'slowdown' | 'blockage'
+    time: float
+    mean_duration: float
+    baseline: float
+    detail: str = ""
+
+
+@dataclass
+class DetectorConfig:
+    m_identical: int = 10     # M
+    n_recent: int = 50        # N
+    slowdown_ratio: float = 1.05
+    blockage_factor: float = 5.0
+    k_resync: int = 200       # K
+    history_iters: int = 512  # window for the 'recent shortest' baseline
+
+
+class IterationDetector:
+    """Online automaton over (event_name, timestamp) pairs."""
+
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
+        self.phase = "detect"                 # detect -> monitor
+        self.sequence: Optional[Tuple[str, ...]] = None
+        self._events: Deque[Tuple[str, float]] = deque(maxlen=4096)
+        self._match_pos = 0
+        self._match_start = 0.0
+        self._mismatches = 0
+        self._last_event_t: Optional[float] = None
+        self.durations: Deque[float] = deque(
+            maxlen=cfg.history_iters)
+        self.triggers: List[Trigger] = []
+
+    # -- phase 1: iteration detection -----------------------------------
+    def _candidate_iterations(self) -> List[Tuple[Tuple[str, ...], float,
+                                                  float]]:
+        """Split history into candidate iterations: D...O maximal chunks
+        (an iteration starts at a dataloader.next that follows an
+        optimizer.step)."""
+        evs = list(self._events)
+        iters = []
+        cur: List[Tuple[str, float]] = []
+        for i, (name, t) in enumerate(evs):
+            if name == DATALOADER_NEXT and cur \
+                    and cur[-1][0] == OPTIMIZER_STEP:
+                iters.append(cur)
+                cur = []
+            cur.append((name, t))
+        if cur and cur[-1][0] == OPTIMIZER_STEP:
+            iters.append(cur)
+        out = []
+        for chunk in iters:
+            names = tuple(n for n, _ in chunk)
+            if names and names[0] == DATALOADER_NEXT \
+                    and names[-1] == OPTIMIZER_STEP:
+                out.append((names, chunk[0][1], chunk[-1][1]))
+        return out
+
+    def _try_lock_sequence(self):
+        cands = self._candidate_iterations()
+        m = self.cfg.m_identical
+        if len(cands) < m:
+            return
+        last = cands[-m:]
+        names0 = last[0][0]
+        if all(c[0] == names0 for c in last):
+            self.sequence = names0
+            self.phase = "monitor"
+            self._match_pos = 0
+            self._mismatches = 0
+            # seed durations from the locked candidates
+            for names, t0, t1 in last:
+                self.durations.append(t1 - t0)
+
+    # -- phase 2: monitoring --------------------------------------------
+    def _record_iteration(self, t0: float, t1: float) -> Optional[Trigger]:
+        self.durations.append(t1 - t0)
+        cfg = self.cfg
+        if len(self.durations) < cfg.n_recent:
+            return None
+        recent = list(self.durations)[-cfg.n_recent:]
+        mean = sum(recent) / len(recent)
+        baseline = min(self.durations)
+        if mean > baseline * cfg.slowdown_ratio:
+            trig = Trigger("slowdown", t1, mean, baseline,
+                           f"mean {mean:.3f}s > {cfg.slowdown_ratio:.2f}x "
+                           f"min {baseline:.3f}s over last {cfg.n_recent}")
+            self.triggers.append(trig)
+            return trig
+        return None
+
+    # -- public API ------------------------------------------------------
+    def feed(self, name: str, t: float) -> Optional[Trigger]:
+        """Feed one anchor event; returns a Trigger if degradation fired."""
+        self._last_event_t = t
+        self._events.append((name, t))
+        if self.phase == "detect":
+            self._try_lock_sequence()
+            return None
+
+        seq = self.sequence
+        assert seq is not None
+        if name == seq[self._match_pos]:
+            if self._match_pos == 0:
+                self._match_start = t
+            self._match_pos += 1
+            self._mismatches = 0
+            if self._match_pos == len(seq):
+                self._match_pos = 0
+                return self._record_iteration(self._match_start, t)
+            return None
+        # mismatch
+        self._mismatches += 1
+        if name == seq[0]:
+            self._match_pos = 1
+            self._match_start = t
+        else:
+            self._match_pos = 0
+        if self._mismatches >= self.cfg.k_resync:
+            self.phase = "detect"
+            self.sequence = None
+            self._mismatches = 0
+        return None
+
+    def check_blockage(self, now: float) -> Optional[Trigger]:
+        """Type-(2) detection: mid-sequence stall >= 5x avg iteration."""
+        if self.phase != "monitor" or not self.durations \
+                or self._last_event_t is None:
+            return None
+        avg = sum(self.durations) / len(self.durations)
+        if now - self._last_event_t >= self.cfg.blockage_factor * avg:
+            trig = Trigger("blockage", now,
+                           now - self._last_event_t, avg,
+                           f"no events for {now - self._last_event_t:.3f}s "
+                           f">= {self.cfg.blockage_factor}x avg {avg:.3f}s")
+            self.triggers.append(trig)
+            return trig
+        return None
+
+    @property
+    def locked(self) -> bool:
+        return self.phase == "monitor"

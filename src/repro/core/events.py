@@ -1,0 +1,80 @@
+"""Event & sample model for PerfTracker.
+
+A "function" is any procedure in LMT (paper §3): Python functions (full call
+stack = identity), GPU compute kernels, memory ops, collective communication.
+Events are intervals on one worker's timeline; resource samples are fixed-rate
+utilization streams (10 kHz in the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class Kind(IntEnum):
+    """Critical-path priority classes (paper §4.2, Fig. 9): lower value =
+    higher priority."""
+    GPU = 0        # GPU computation kernels
+    MEM = 1        # memory operations (malloc/memcpy/H2D/D2H)
+    COMM = 2       # collective communication kernels
+    PYTHON = 3     # Python functions (training thread, leaf frames)
+
+
+#: resource stream that determines performance per kind (paper §4.2)
+RESOURCE_FOR_KIND = {
+    Kind.GPU: "gpu_sm",
+    Kind.MEM: "membw",
+    Kind.COMM: "pcie_tx",     # GPU->NIC for inter-host collectives
+    Kind.PYTHON: "cpu",
+}
+
+
+@dataclass(frozen=True)
+class FunctionEvent:
+    name: str                 # identity; Python functions: full call stack
+    kind: Kind
+    start: float              # seconds
+    end: float
+    worker: int = 0
+    thread: str = "train"     # Python events: only 'train' thread counts
+    depth: int = 0            # call-stack depth (leaf selection)
+    resource: str = ""        # override of RESOURCE_FOR_KIND
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+    def resource_stream(self) -> str:
+        return self.resource or RESOURCE_FOR_KIND[self.kind]
+
+
+@dataclass
+class SampleStream:
+    """Fixed-rate utilization samples in [0, 1]."""
+    rate_hz: float
+    t0: float
+    values: np.ndarray
+
+    def window(self, start: float, end: float) -> np.ndarray:
+        i0 = max(0, int((start - self.t0) * self.rate_hz))
+        i1 = min(len(self.values), int(np.ceil((end - self.t0)
+                                               * self.rate_hz)))
+        return self.values[i0:max(i0, i1)]
+
+
+@dataclass
+class WorkerProfile:
+    """One worker's raw profiling window (paper: ~3 GB; here: whatever the
+    simulator / tracer produced)."""
+    worker: int
+    window: Tuple[float, float]
+    events: List[FunctionEvent] = field(default_factory=list)
+    streams: Dict[str, SampleStream] = field(default_factory=dict)
+
+    def raw_size_bytes(self) -> int:
+        ev = sum(64 + len(e.name) for e in self.events)
+        st = sum(v.values.nbytes for v in self.streams.values())
+        return ev + st

@@ -1,0 +1,49 @@
+"""Expected ranges R_f (paper §4.3, Eq. 6) assigned by function class.
+
+Paper values: Python functions R = [0, 0.01] x [0,1] x [0,1] (an LMT should
+not be bottlenecked >1% by any Python function); collective communication
+R = [0, 0.3] x [0,1] x [0,1]; GPU compute kernels are never 'unexpected'
+(R = full box). Per-family adjustments (DESIGN.md §5): MoE archs allow a
+wider collective box for all_to_all/dispatch phases.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.events import Kind
+
+Box = Tuple[Tuple[float, float], Tuple[float, float], Tuple[float, float]]
+
+FULL: Box = ((0.0, 1.0), (0.0, 1.0), (0.0, 1.0))
+PYTHON_BOX: Box = ((0.0, 0.01), (0.0, 1.0), (0.0, 1.0))
+COMM_BOX: Box = ((0.0, 0.3), (0.0, 1.0), (0.0, 1.0))
+MEM_BOX: Box = ((0.0, 0.4), (0.0, 1.0), (0.0, 1.0))
+MOE_COMM_BOX: Box = ((0.0, 0.45), (0.0, 1.0), (0.0, 1.0))
+
+
+def expected_box(kind: Kind, name: str = "", family: str = "dense") -> Box:
+    if kind == Kind.GPU:
+        return FULL
+    if kind == Kind.COMM:
+        if family == "moe" and ("all_to_all" in name or "dispatch" in name
+                                or "combine" in name):
+            return MOE_COMM_BOX
+        return COMM_BOX
+    if kind == Kind.MEM:
+        return MEM_BOX
+    return PYTHON_BOX
+
+
+def distance_from_expectation(p: np.ndarray, box: Box) -> float:
+    """Minimal Manhattan distance from pattern p=(beta,mu,sigma) to the box
+    (Eq. 7)."""
+    d = 0.0
+    for x, (lo, hi) in zip(p, box):
+        if x < lo:
+            d += lo - x
+        elif x > hi:
+            d += x - hi
+    return float(d)

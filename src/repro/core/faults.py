@@ -1,0 +1,59 @@
+"""Fault models injected into the fleet simulator — one per production case
+the paper diagnoses (§3, §6.1, §6.2)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+
+@dataclass(frozen=True)
+class Fault:
+    pass
+
+
+@dataclass(frozen=True)
+class GpuThrottle(Fault):
+    """§6.1 P1: intermittent GPU clock throttling on some hosts — GEMMs take
+    longer (larger beta) at lower SM/frequency utilization (smaller mu)."""
+    workers: Sequence[int]
+    slowdown: float = 2.0
+    util: float = 0.33
+
+
+@dataclass(frozen=True)
+class NvlinkDown(Fault):
+    """§6.1 P2: NVLink NS error — traffic falls back to PCIe. The affected
+    workers' collectives show high PCIe mu; every worker in their DP groups
+    shows larger beta."""
+    workers: Sequence[int]
+    group_size: int = 16
+    slowdown: float = 3.0
+
+
+@dataclass(frozen=True)
+class RingSlowLink(Fault):
+    """§3: one NIC bond degraded to ``rho`` of nominal."""
+    slow_worker: int
+    rho: float = 0.5
+    ring_workers: Optional[Sequence[int]] = None  # None = all
+
+
+@dataclass(frozen=True)
+class SlowDataloader(Fault):
+    """§6.2 P1: slow storage — socket recv_into dominates on ALL workers."""
+    slowdown: float = 20.0
+
+
+@dataclass(frozen=True)
+class CpuBoundForward(Fault):
+    """§6.2 P2: inefficient Python forward() — CPU-bound on some workers."""
+    workers: Sequence[int] = ()
+    slowdown: float = 6.0
+
+
+@dataclass(frozen=True)
+class AsyncGc(Fault):
+    """§6.2 P3: unsynchronized Python GC — random workers pause on random
+    iterations in non-CPU-intensive Python frames; peers wait."""
+    probability: float = 0.15
+    pause_s: float = 0.25

@@ -1,0 +1,67 @@
+"""Mitigation hooks: PerfTracker's localization output drives the
+fault-tolerance machinery (DESIGN.md §4) — the paper's observability becomes
+the cluster's straggler/failure sensor.
+
+Actions map 1:1 to what the paper's operators did (§6): replace flagged
+hosts (checkpoint-now + elastic re-mesh without them), move data loading,
+synchronize GC, flag code for optimization.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.events import Kind
+from repro.core.report import Diagnosis
+
+
+class Action(Enum):
+    REPLACE_HOSTS = "replace_hosts"          # checkpoint-now + re-mesh
+    CHECKPOINT_NOW = "checkpoint_now"
+    MIGRATE_DATALOADER = "migrate_dataloader"
+    SYNCHRONIZE_GC = "synchronize_gc"
+    FLAG_CODE = "flag_code_for_optimization"
+    NONE = "none"
+
+
+@dataclass
+class MitigationPlan:
+    action: Action
+    workers: List[int] = field(default_factory=list)
+    detail: str = ""
+
+
+def plan_mitigations(diagnoses: Sequence[Diagnosis], fleet_size: int
+                     ) -> List[MitigationPlan]:
+    plans: List[MitigationPlan] = []
+    bad_hosts: set = set()
+    for d in diagnoses:
+        a = d.abnormality
+        frac = len(a.workers) / max(1, fleet_size)
+        if a.kind in (Kind.GPU, Kind.COMM) and frac < 0.5:
+            bad_hosts.update(a.workers.tolist())
+        elif a.kind == Kind.PYTHON:
+            if "socket" in a.function or "dataloader" in a.function:
+                plans.append(MitigationPlan(
+                    Action.MIGRATE_DATALOADER, [],
+                    "move input data to the parallel file system"))
+            elif "gc" in d.hint or "garbage" in d.hint:
+                plans.append(MitigationPlan(
+                    Action.SYNCHRONIZE_GC, [],
+                    "manually collect garbage every K iterations on all "
+                    "workers"))
+            else:
+                plans.append(MitigationPlan(
+                    Action.FLAG_CODE, a.workers.tolist(),
+                    f"optimize {a.function}"))
+    if bad_hosts:
+        plans.insert(0, MitigationPlan(
+            Action.REPLACE_HOSTS, sorted(bad_hosts),
+            "checkpoint-now, drop flagged hosts, elastic re-mesh on "
+            "standbys (see repro.ckpt + launch.train --elastic)"))
+    if not plans:
+        plans.append(MitigationPlan(Action.NONE))
+    return plans

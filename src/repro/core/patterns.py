@@ -1,0 +1,146 @@
+"""Runtime behavior patterns P_{f,w} = (beta, mu, sigma) — paper §4.2.
+
+beta: fraction of the profiling window the function spends on the critical
+      path (Eq. 2-3).
+mu:   duration-weighted mean resource utilization over the *critical
+      execution duration* L(e) of each execution (Eq. 4), where L(e) is found
+      by Algorithm 1 — the subinterval holding >=80% of the utilization mass
+      with the smallest allowed run of consecutive zero samples (binary
+      search over the gap bound g).
+sigma: same weighting for the utilization std-dev (Eq. 5).
+
+The pure-python/numpy implementation here is the oracle; the TPU Pallas
+kernel (repro.kernels.pattern_summary) computes the same quantities for
+batches of events.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.critical_path import critical_time_by_function
+from repro.core.events import FunctionEvent, Kind, WorkerProfile
+
+MASS_FRACTION = 0.8
+
+
+def critical_duration(u: np.ndarray, mass: float = MASS_FRACTION
+                      ) -> Tuple[int, int]:
+    """Algorithm 1: smallest max-zero-gap subinterval with >= mass of the
+    total utilization. Returns [l, r) sample indices (r exclusive).
+
+    For a gap bound g, the feasible subintervals that avoid any zero-run
+    longer than g are exactly the maximal regions obtained by splitting at
+    zero-runs of length > g; feasibility <=> some region holds >= mass*S.
+    Binary search over g in [0, n]."""
+    n = len(u)
+    if n == 0:
+        return (0, 0)
+    total = float(u.sum())
+    if total <= 0.0:
+        return (0, n)
+    target = mass * total
+
+    zero = u <= 0.0
+    # zero-run ids and lengths
+    csum = np.concatenate([[0.0], np.cumsum(u)])
+
+    def best_region(g: int) -> Optional[Tuple[int, int]]:
+        # split points: zero-runs strictly longer than g
+        regions = []
+        start = 0
+        run = 0
+        for i in range(n):
+            if zero[i]:
+                run += 1
+            else:
+                if run > g and i - run >= start:
+                    regions.append((start, i - run))
+                    start = i
+                run = 0
+        regions.append((start, n))
+        best = None
+        best_mass = -1.0
+        for lo, hi in regions:
+            # trim leading/trailing zeros
+            while lo < hi and zero[lo]:
+                lo += 1
+            while hi > lo and zero[hi - 1]:
+                hi -= 1
+            if hi <= lo:
+                continue
+            s = csum[hi] - csum[lo]
+            # among feasible regions keep the max-mass one (leftmost tie) —
+            # matches the vectorized TPU kernel's selection rule
+            if s >= target - 1e-9 and s > best_mass + 1e-12:
+                best = (lo, hi)
+                best_mass = s
+        return best
+
+    lo_g, hi_g = 0, n
+    result = (0, n)
+    while lo_g <= hi_g:
+        g = (lo_g + hi_g) // 2
+        reg = best_region(g)
+        if reg is not None:
+            result = reg
+            hi_g = g - 1
+        else:
+            lo_g = g + 1
+    return result
+
+
+@dataclass
+class Pattern:
+    beta: float
+    mu: float
+    sigma: float
+
+    def as_array(self) -> np.ndarray:
+        return np.array([self.beta, self.mu, self.sigma], np.float32)
+
+
+def summarize_worker(profile: WorkerProfile,
+                     kinds: Optional[Dict[str, Kind]] = None
+                     ) -> Dict[str, Pattern]:
+    """Per-function behavior patterns for one worker (paper §4.2)."""
+    t0, t1 = profile.window
+    T = t1 - t0
+    beta = critical_time_by_function(profile.events, profile.window)
+
+    # group executions by function identity
+    groups: Dict[str, List[FunctionEvent]] = defaultdict(list)
+    for e in profile.events:
+        groups[e.name].append(e)
+
+    out: Dict[str, Pattern] = {}
+    for name, evs in groups.items():
+        num_mu = num_sig = den = 0.0
+        for e in evs:
+            stream = profile.streams.get(e.resource_stream())
+            if stream is None:
+                continue
+            u = stream.window(e.start, e.end)
+            if len(u) == 0:
+                continue
+            lo, hi = critical_duration(u)
+            seg = u[lo:hi]
+            if len(seg) == 0:
+                continue
+            w = len(seg) / stream.rate_hz      # |L(e)|
+            num_mu += w * float(seg.mean())
+            num_sig += w * float(seg.std())
+            den += w
+        mu = num_mu / den if den else 0.0
+        sigma = num_sig / den if den else 0.0
+        out[name] = Pattern(beta=min(1.0, beta.get(name, 0.0) / T),
+                            mu=min(1.0, mu), sigma=min(1.0, sigma))
+    return out
+
+
+def pattern_size_bytes(patterns: Dict[str, Pattern]) -> int:
+    """Serialized size: full function identity (call stack) + 3 floats."""
+    return sum(len(name.encode()) + 12 for name in patterns)

@@ -1,0 +1,102 @@
+"""PerfTracker service: the end-to-end pipeline of Fig. 6.
+
+  anchor events -> IterationDetector -> trigger -> 20s profiling window on
+  every worker -> per-worker pattern summarization (daemon) -> centralized
+  localization (single core) -> Fig.-7 report (+ mitigation hooks).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.detector import DetectorConfig, IterationDetector, Trigger
+from repro.core.daemon import PatternUpload, summarize_and_upload
+from repro.core.events import Kind, WorkerProfile
+from repro.core.localizer import Abnormality, Localizer
+from repro.core.report import Diagnosis, build_report, format_report
+
+
+@dataclass
+class DiagnosisResult:
+    trigger: Optional[Trigger]
+    diagnoses: List[Diagnosis]
+    fleet_size: int
+    timing: Dict[str, float]
+    pattern_bytes: int
+    raw_bytes: int
+
+    def report(self) -> str:
+        return format_report(self.diagnoses, self.fleet_size)
+
+    def functions(self) -> List[str]:
+        return [d.abnormality.function for d in self.diagnoses]
+
+
+class PerfTrackerService:
+    """Global side of PerfTracker. ``family`` tunes expected-range boxes."""
+
+    def __init__(self, family: str = "dense",
+                 detector_cfg: DetectorConfig = DetectorConfig()):
+        self.family = family
+        self.detector = IterationDetector(detector_cfg)
+        self.localizer = Localizer(family=family)
+
+    # -- detection ---------------------------------------------------------
+    def feed_anchors(self, events: Sequence[Tuple[str, float]]
+                     ) -> Optional[Trigger]:
+        for name, t in events:
+            trig = self.detector.feed(name, t)
+            if trig is not None:
+                return trig
+        return None
+
+    # -- diagnosis ---------------------------------------------------------
+    def aggregate(self, uploads: Sequence[PatternUpload]
+                  ) -> Tuple[Dict[str, np.ndarray], Dict[str, Kind]]:
+        """Stack per-worker patterns into (W, 3) arrays per function.
+        Functions missing on a worker get that worker's zeros (never on its
+        critical path)."""
+        per_worker = [u.unpack() for u in uploads]
+        names = sorted({n for pats, _ in per_worker for n in pats})
+        kinds: Dict[str, Kind] = {}
+        W = len(uploads)
+        agg = {n: np.zeros((W, 3), np.float32) for n in names}
+        for w, (pats, ks) in enumerate(per_worker):
+            for n, p in pats.items():
+                agg[n][w] = p
+                kinds.setdefault(n, ks[n])
+        return agg, kinds
+
+    def diagnose_profiles(self, profiles: Sequence[WorkerProfile],
+                          kind_of: Dict[str, Kind] = None,
+                          trigger: Optional[Trigger] = None
+                          ) -> DiagnosisResult:
+        timing = {}
+        t0 = time.perf_counter()
+        uploads = [summarize_and_upload(p, kind_of) for p in profiles]
+        timing["summarize_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        agg, kinds = self.aggregate(uploads)
+        abn = self.localizer.localize(agg, kinds)
+        timing["localize_s"] = time.perf_counter() - t1
+        return DiagnosisResult(
+            trigger=trigger,
+            diagnoses=build_report(abn, len(profiles)),
+            fleet_size=len(profiles),
+            timing=timing,
+            pattern_bytes=sum(len(u.payload) for u in uploads),
+            raw_bytes=sum(u.raw_bytes for u in uploads))
+
+    def diagnose_patterns(self, patterns: Dict[str, np.ndarray],
+                          kinds: Dict[str, Kind]) -> DiagnosisResult:
+        """Pattern-mode entry (scaling benchmarks / pre-aggregated fleets)."""
+        W = next(iter(patterns.values())).shape[0] if patterns else 0
+        t0 = time.perf_counter()
+        abn = self.localizer.localize(patterns, kinds)
+        dt = time.perf_counter() - t0
+        return DiagnosisResult(
+            trigger=None, diagnoses=build_report(abn, W), fleet_size=W,
+            timing={"localize_s": dt}, pattern_bytes=0, raw_bytes=0)

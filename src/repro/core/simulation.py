@@ -1,0 +1,245 @@
+"""Fleet simulator: synthesizes per-worker event timelines + 10 kHz-class
+resource sample streams for an LMT job, with fault injection (repro of the
+paper's §3 / §6 cases; the paper itself uses simulated patterns for its
+1M-GPU scaling result, Fig. 17c).
+
+Two modes:
+  * raw mode  — full WorkerProfile (events + sample streams) for small
+    fleets; exercised end-to-end through critical-path + Algorithm 1;
+  * pattern mode — direct (W, 3) pattern synthesis for 100k-1M-worker
+    scaling benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
+from repro.core import faults as F
+from repro.core.ring import RingConfig, ring_utilization
+
+DATALOADER_STACK = ("train.py:train_loop/dataloader.py:__next__/"
+                    "socket.py:recv_into")
+FORWARD_STACK = "train.py:train_loop/model.py:forward"
+GC_STACK = "train.py:train_loop/gradmode.py:__init__"
+GEMM = "CUDA_GEMM_kernel"
+ALLREDUCE = "AllReduce_RING"
+ALLGATHER = "AllGather_RING"
+H2D = "memcpy_h2d"
+OPT_STACK = "train.py:train_loop/optimizer.py:step"
+
+
+@dataclass
+class SimConfig:
+    n_workers: int = 32
+    iteration_s: float = 1.0
+    n_fwd_gemms: int = 6
+    n_bwd_gemms: int = 6
+    rate_hz: float = 2000.0
+    window_s: float = 2.0
+    dp_group_size: int = 16
+    seed: int = 0
+    family: str = "dense"
+
+
+class FleetSimulator:
+    def __init__(self, cfg: SimConfig, faults: Sequence[F.Fault] = ()):
+        self.cfg = cfg
+        self.faults = list(faults)
+        self.rng = np.random.default_rng(cfg.seed)
+
+    # -- helpers ----------------------------------------------------------
+    def _fault(self, kind):
+        return [f for f in self.faults if isinstance(f, kind)]
+
+    def iteration_multiplier(self) -> float:
+        """Job-level slowdown factor from active faults (all workers are
+        gated by collectives, so the slowest worker sets the pace)."""
+        m = 1.0
+        for f in self.faults:
+            if isinstance(f, F.GpuThrottle):
+                m = max(m, 1 + 0.45 * (f.slowdown - 1))
+            elif isinstance(f, F.NvlinkDown):
+                m = max(m, 1 + 0.25 * (f.slowdown - 1))
+            elif isinstance(f, F.RingSlowLink):
+                m = max(m, 1 + 0.35 * (1 / f.rho - 1))
+            elif isinstance(f, F.SlowDataloader):
+                m = max(m, 1 + 0.005 * f.slowdown)
+            elif isinstance(f, F.CpuBoundForward):
+                m = max(m, 1 + 0.1 * f.slowdown)
+            elif isinstance(f, F.AsyncGc):
+                m = max(m, 1 + f.probability * f.pause_s
+                        / self.cfg.iteration_s)
+        return m
+
+    # -- anchor event stream (feeds the §4.1 detector) --------------------
+    def anchor_events(self, n_iters: int, degrade_after: Optional[int] = None
+                      ) -> List[Tuple[str, float]]:
+        """(name, t) stream of dataloader.next / optimizer.step anchors.
+        Faults kick in after iteration ``degrade_after`` (None = from t=0)."""
+        out = []
+        t = 0.0
+        mult = self.iteration_multiplier()
+        for i in range(n_iters):
+            m = mult if degrade_after is None or i >= degrade_after else 1.0
+            dur = self.cfg.iteration_s * m \
+                * (1 + 0.01 * self.rng.standard_normal())
+            out.append(("dataloader.next", t))
+            out.append(("optimizer.step", t + dur * 0.97))
+            t += dur
+        return out
+
+    # -- raw profiling window ---------------------------------------------
+    def profile_window(self) -> List[WorkerProfile]:
+        cfg = self.cfg
+        profiles = []
+        gc_fault = self._fault(F.AsyncGc)
+        ring_fault = self._fault(F.RingSlowLink)
+        ring_traces = None
+        if ring_fault:
+            rf = ring_fault[0]
+            ring_traces = ring_utilization(
+                RingConfig(n_workers=cfg.n_workers), cfg.window_s,
+                cfg.rate_hz, slow_worker=rf.slow_worker, rho=rf.rho,
+                rng=self.rng)
+        for w in range(cfg.n_workers):
+            profiles.append(self._worker_profile(w, ring_traces))
+        return profiles
+
+    def _worker_profile(self, w: int, ring_traces) -> WorkerProfile:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, w))
+        n = int(cfg.window_s * cfg.rate_hz)
+        streams = {
+            "gpu_sm": np.zeros(n),
+            "cpu": np.zeros(n),
+            "pcie_tx": np.zeros(n),
+            "membw": np.zeros(n),
+        }
+        events: List[FunctionEvent] = []
+
+        throttle = next((f for f in self._fault(F.GpuThrottle)
+                         if w in f.workers), None)
+        nvlink = self._fault(F.NvlinkDown)
+        nv_self = any(w in f.workers for f in nvlink)
+        nv_group = any((w // f.group_size) in {x // f.group_size
+                                               for x in f.workers}
+                       for f in nvlink)
+        dl = self._fault(F.SlowDataloader)
+        cpufwd = next((f for f in self._fault(F.CpuBoundForward)
+                       if not f.workers or w in f.workers), None)
+        gc = self._fault(F.AsyncGc)
+
+        def paint(stream: str, t0: float, t1: float, level: float,
+                  jitter: float = 0.03):
+            i0, i1 = int(t0 * cfg.rate_hz), int(t1 * cfg.rate_hz)
+            i0, i1 = max(0, i0), min(n, i1)
+            if i1 > i0:
+                streams[stream][i0:i1] = np.clip(
+                    level + rng.normal(0, jitter, i1 - i0), 0, 1)
+
+        t = 0.0
+        iter_s = cfg.iteration_s
+        while t < cfg.window_s:
+            # 1) dataloader
+            d = 0.005 * iter_s * (dl[0].slowdown if dl else 1.0)
+            events.append(FunctionEvent(DATALOADER_STACK, Kind.PYTHON,
+                                        t, t + d, w, depth=3))
+            paint("cpu", t, t + d, 0.35 if dl else 0.5)
+            t += d
+            # 2) forward: python wrapper + GEMMs (+ h2d)
+            fwd_mult = (cpufwd.slowdown if cpufwd else 1.0)
+            fwd_py = 0.004 * iter_s * fwd_mult
+            events.append(FunctionEvent(FORWARD_STACK, Kind.PYTHON,
+                                        t, t + fwd_py, w, depth=2))
+            paint("cpu", t, t + fwd_py, 0.9 if cpufwd else 0.4)
+            t += fwd_py
+            g = 0.33 * iter_s / cfg.n_fwd_gemms
+            for _ in range(cfg.n_fwd_gemms):
+                gd = g * (throttle.slowdown if throttle else 1.0)
+                events.append(FunctionEvent(GEMM, Kind.GPU, t, t + gd, w))
+                paint("gpu_sm", t, t + gd,
+                      throttle.util if throttle else 0.92)
+                t += gd
+            # 3) h2d memcpy
+            md = 0.01 * iter_s
+            events.append(FunctionEvent(H2D, Kind.MEM, t, t + md, w))
+            paint("membw", t, t + md, 0.7)
+            t += md
+            # 4) backward GEMMs
+            for _ in range(cfg.n_bwd_gemms):
+                gd = g * (throttle.slowdown if throttle else 1.0)
+                events.append(FunctionEvent(GEMM, Kind.GPU, t, t + gd, w))
+                paint("gpu_sm", t, t + gd,
+                      throttle.util if throttle else 0.92)
+                t += gd
+            # 5) collectives (AllGather + AllReduce)
+            cd = 0.1 * iter_s
+            if nv_group:
+                cd *= nvlink[0].slowdown
+            if ring_traces is not None:
+                cd *= 1.0 / self._fault(F.RingSlowLink)[0].rho * 0.8
+            events.append(FunctionEvent(ALLGATHER, Kind.COMM, t, t + cd, w))
+            if ring_traces is not None:
+                i0, i1 = int(t * cfg.rate_hz), min(n, int((t + cd)
+                                                          * cfg.rate_hz))
+                seg = ring_traces[w][i0:i1]
+                streams["pcie_tx"][i0:i0 + len(seg)] = seg
+            else:
+                paint("pcie_tx", t, t + cd,
+                      0.85 if nv_self else (0.35 if nv_group else 0.55))
+            t += cd
+            # 6) async GC pause (random python frame, low CPU)
+            if gc and rng.random() < gc[0].probability:
+                gd = gc[0].pause_s
+                events.append(FunctionEvent(GC_STACK, Kind.PYTHON,
+                                            t, t + gd, w, depth=2))
+                paint("cpu", t, t + gd, 0.08)
+                t += gd
+            # 7) optimizer.step
+            od = 0.004 * iter_s
+            events.append(FunctionEvent(OPT_STACK, Kind.PYTHON, t, t + od,
+                                        w, depth=2))
+            paint("cpu", t, t + od, 0.6)
+            t += od
+
+        t0 = 0.0
+        return WorkerProfile(
+            worker=w, window=(t0, self.cfg.window_s),
+            events=[e for e in events if e.start < self.cfg.window_s],
+            streams={k: SampleStream(cfg.rate_hz, 0.0, v)
+                     for k, v in streams.items()})
+
+    # -- pattern mode (scaling benchmarks) ---------------------------------
+    def synth_patterns(self, n_functions: int = 20
+                       ) -> Tuple[Dict[str, np.ndarray], Dict[str, Kind]]:
+        """Direct (W, 3) pattern synthesis for very large fleets."""
+        W = self.cfg.n_workers
+        rng = self.rng
+        patterns: Dict[str, np.ndarray] = {}
+        kinds: Dict[str, Kind] = {}
+        for i in range(n_functions):
+            kind = [Kind.GPU, Kind.COMM, Kind.PYTHON, Kind.MEM][i % 4]
+            beta0 = {Kind.GPU: 0.5, Kind.COMM: 0.15, Kind.PYTHON: 0.005,
+                     Kind.MEM: 0.05}[kind] / max(1, n_functions // 8)
+            mu0 = 0.8
+            p = np.stack([
+                np.clip(beta0 * (1 + 0.05 * rng.standard_normal(W)), 0, 1),
+                np.clip(mu0 * (1 + 0.05 * rng.standard_normal(W)), 0, 1),
+                np.clip(0.05 * (1 + 0.3 * rng.standard_normal(W)), 0, 1),
+            ], axis=1).astype(np.float32)
+            name = f"{kind.name.lower()}_func_{i}"
+            patterns[name] = p
+            kinds[name] = kind
+        # inject: GPU throttle on a random 1% subset for function 0
+        thr = self._fault(F.GpuThrottle)
+        if thr:
+            idx = np.asarray(thr[0].workers)
+            f0 = next(k for k, v in kinds.items() if v == Kind.GPU)
+            patterns[f0][idx, 0] = np.clip(
+                patterns[f0][idx, 0] * thr[0].slowdown, 0, 1)
+            patterns[f0][idx, 1] = thr[0].util
+        return patterns, kinds

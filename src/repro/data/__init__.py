@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, DataLoader, SyntheticLM  # noqa: F401

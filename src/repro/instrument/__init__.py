@@ -1,0 +1,2 @@
+from repro.instrument.hooks import PerfTracker, PerfTrackerConfig  # noqa: F401
+from repro.instrument.tracer import HostSampler, Tracer  # noqa: F401

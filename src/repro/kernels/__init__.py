@@ -1,0 +1,1 @@
+from repro.kernels.ops import flash_attention, pattern_summary, ssd_scan  # noqa: F401

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for PerfTracker's behavior-pattern summarization
+(paper §4.2, Algorithm 1) — the observability hot loop at 10 kHz x 20 s x
+thousands of events per worker.
+
+TPU-native re-think (DESIGN.md §2): the paper's per-event sequential binary
+search becomes, per event row, ceil(log2(n))+1 *vectorized* feasibility
+passes over the sample vector:
+
+  zero-run length   rl(i) = i - cummax(where(u>0, i, -1))
+  splitter(i, g)    = rl(i) > g           (inside a zero-run beyond g)
+  region start s(i) = cummax(where(start, i, 0))
+  region mass at i  = csum(i+1) - csum(s(i))
+  feasible(g)       = max_i [not splitter] region_mass >= 0.8 * total
+
+then (mu, sigma, len) of the max-mass region at the optimal g. Everything is
+row-parallel (events block 8 x samples 128-lane tiles, VPU-only — no MXU).
+
+Output per event: (mean, std, frac_len) over the critical execution duration.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASS_FRACTION = 0.8
+
+
+def _region_stats(u, g):
+    """Vectorized max-mass feasible region for gap bound g.
+    u: (E, n) f32. Returns (mass (E,), lo (E,), hi (E,)) of the best region
+    (hi exclusive); regions are maximal runs without zero-gaps > g."""
+    E, n = u.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (E, n), 1)
+    nz = u > 0.0
+    last_nz = jax.lax.cummax(jnp.where(nz, idx, -1), axis=1)
+    rl = idx - last_nz                      # zero-run length at i (0 if nz)
+    split = rl > g
+    # region starts: first non-split position after a split (or i==0)
+    prev_split = jnp.concatenate(
+        [jnp.ones((E, 1), jnp.bool_), split[:, :-1]], axis=1)
+    start = (~split) & prev_split
+    start_idx = jax.lax.cummax(jnp.where(start, idx, 0), axis=1)
+    csum = jnp.cumsum(u, axis=1)
+    csum0 = jnp.concatenate([jnp.zeros((E, 1), u.dtype), csum[:, :-1]],
+                            axis=1)
+    # mass of region up to and including i
+    mass_i = jnp.where(~split, csum - jnp.take_along_axis(
+        csum0, start_idx, axis=1), -1.0)
+    best = jnp.argmax(mass_i, axis=1)                    # (E,)
+    best_mass = jnp.take_along_axis(mass_i, best[:, None], axis=1)[:, 0]
+    lo = jnp.take_along_axis(start_idx, best[:, None], axis=1)[:, 0]
+    hi = best + 1
+    return best_mass, lo, hi
+
+
+def _trim(u, lo, hi):
+    """Trim leading/trailing zeros of [lo, hi) per row (vectorized)."""
+    E, n = u.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (E, n), 1)
+    inside = (idx >= lo[:, None]) & (idx < hi[:, None]) & (u > 0)
+    big = jnp.int32(n + 1)
+    lo2 = jnp.min(jnp.where(inside, idx, big), axis=1)
+    hi2 = jnp.max(jnp.where(inside, idx + 1, 0), axis=1)
+    lo2 = jnp.where(lo2 == big, lo, lo2)
+    hi2 = jnp.maximum(hi2, lo2)
+    return lo2, hi2
+
+
+def _kernel(u_ref, out_ref, *, n: int, iters: int):
+    u = u_ref[...].astype(jnp.float32)        # (BE, n)
+    E = u.shape[0]
+    total = u.sum(axis=1)
+    target = MASS_FRACTION * total - 1e-9
+
+    def body(_, carry):
+        lo_g, hi_g, best_g = carry
+        g = (lo_g + hi_g) // 2
+        mass, _, _ = _region_stats(u, g[:, None])
+        feas = mass >= target
+        best_g = jnp.where(feas, g, best_g)
+        hi_g = jnp.where(feas, g - 1, hi_g)
+        lo_g = jnp.where(feas, lo_g, g + 1)
+        return lo_g, hi_g, best_g
+
+    lo_g = jnp.zeros((E,), jnp.int32)
+    hi_g = jnp.full((E,), n, jnp.int32)
+    best_g = jnp.full((E,), n, jnp.int32)
+    lo_g, hi_g, best_g = jax.lax.fori_loop(
+        0, iters, body, (lo_g, hi_g, best_g))
+
+    mass, lo, hi = _region_stats(u, best_g[:, None])
+    lo, hi = _trim(u, lo, hi)
+    idx = jax.lax.broadcasted_iota(jnp.int32, u.shape, 1)
+    inside = (idx >= lo[:, None]) & (idx < hi[:, None])
+    cnt = jnp.maximum((hi - lo).astype(jnp.float32), 1.0)
+    mean = jnp.where(inside, u, 0.0).sum(axis=1) / cnt
+    var = jnp.where(inside, jnp.square(u - mean[:, None]), 0.0
+                    ).sum(axis=1) / cnt
+    # all-zero rows: whole window, mean/std 0
+    empty = total <= 0.0
+    mean = jnp.where(empty, 0.0, mean)
+    var = jnp.where(empty, 0.0, var)
+    frac = jnp.where(empty, 1.0, cnt / n)
+    out_ref[...] = jnp.stack(
+        [mean, jnp.sqrt(var), frac], axis=1).astype(out_ref.dtype)
+
+
+def pattern_summary(u, block_events: int = 8, interpret: bool = True):
+    """u: (E, n) utilization samples in [0,1] (zero-padded rows ok).
+    Returns (E, 3): [mu, sigma, critical-duration fraction]."""
+    E, n = u.shape
+    be = min(block_events, E)
+    pad = (-E) % be
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad, n), u.dtype)], axis=0)
+    iters = max(1, math.ceil(math.log2(n + 1)) + 1)
+    kernel = functools.partial(_kernel, n=n, iters=iters)
+    out = pl.pallas_call(
+        kernel,
+        grid=((E + pad) // be,),
+        in_specs=[pl.BlockSpec((be, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((be, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E + pad, 3), jnp.float32),
+        interpret=interpret,
+    )(u)
+    return out[:E]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (B, H, NC) with the chunk axis innermost: the running inter-chunk state
+(N, P) lives in VMEM scratch and is carried across the NC iterations of one
+(b, h) cell — the chunk recurrence is sequential by construction, so the
+kernel keeps the state resident instead of round-tripping HBM (the TPU
+adaptation of the paper's GPU SSD kernel; DESIGN.md §2).
+
+Per chunk (all in VMEM, MXU for the three matmuls):
+  cum   = cumsum(dt * A)                          (Q,)
+  CB    = C @ B^T  masked by decay L              (Q, Q)
+  y     = (CB * L) @ x  +  (C @ state) * exp(cum) (Q, P)
+  state = exp(cum[-1]) * state + (B * w)^T @ x    (N, P)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            q: int, nc: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0]                               # scalar (negative)
+    Bm = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+
+    dA = dt * A
+    cum = jnp.cumsum(dA)                       # (Q,)
+    # intra-chunk
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    rel = cum[:, None] - cum[None, :]
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    Lmat = jnp.where(tril, jnp.exp(rel), 0.0) * dt[None, :]
+    y = jax.lax.dot_general(CB * Lmat, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk
+    state = state_ref[...]                     # (N, P)
+    y += jax.lax.dot_general(Cm, state, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+    # state update
+    w = jnp.exp(cum[-1] - cum) * dt            # (Q,)
+    ds = jax.lax.dot_general(Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    state_ref[...] = state * jnp.exp(cum[-1]) + ds
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,G,N).
+    Returns y: (B,S,H,P)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xt = x.transpose(0, 2, 1, 3)               # (B,H,S,P)
+    dtt = dt.transpose(0, 2, 1)                # (B,H,S)
+    bt = Bm.transpose(0, 2, 1, 3)              # (B,G,S,N)
+    ct = Cm.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, q=Q, nc=nc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, h // rep, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), bt, ct)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,99 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
+      --steps 100 --ckpt-dir /tmp/ckpt
+
+Production posture: ``--mesh single|multi`` builds the 256/512-chip mesh
+(placeholder host devices in this container; on real TPU pods the same code
+runs under jax.distributed with megascale DCN transport). XLA flags for
+compute/comm overlap (latency-hiding scheduler, async collectives) are set
+here for TPU targets.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+TPU_XLA_FLAGS = " ".join([
+    # compute/comm overlap on TPU targets (no-ops on CPU)
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+    "--xla_tpu_enable_async_all_gather=true",
+    "--xla_enable_async_all_reduce=true",
+])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--no-perftracker", action="store_true")
+    ap.add_argument("--inject-slow-dataloader", type=float, default=0.0,
+                    help="seconds of injected storage latency per batch "
+                         "after step N/2 (reproduces case C2P1 online)")
+    args = ap.parse_args()
+
+    if args.mesh != "none":
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count"
+                                   "=512 " + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    from repro.configs.registry import ARCHS, reduced
+    from repro.data.pipeline import DataConfig
+    from repro.dist.sharding import DistCtx
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim.adamw import OptConfig
+    from repro.train.loop import TrainConfig, Trainer
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+
+    dist = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        dist = DistCtx.from_mesh(mesh)
+
+    data = DataConfig(batch=args.batch, seq_len=args.seq)
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, remat=args.remat,
+                     perftracker=not args.no_perftracker)
+    opt = OptConfig(lr_peak=args.lr, warmup_steps=max(10, args.steps // 20),
+                    total_steps=args.steps)
+    trainer = Trainer(cfg, data, opt, tc, dist=dist)
+
+    if args.inject_slow_dataloader:
+        half = args.steps // 2
+        orig_next = trainer.loader.next
+
+        def degrading_next():
+            if trainer.loader.step >= half:
+                trainer.loader.source.data.delay_s = \
+                    args.inject_slow_dataloader
+            return orig_next()
+        trainer.loader.next = degrading_next
+        if trainer.pt:
+            trainer._next, _ = trainer.pt.wrap(degrading_next, lambda: None)
+
+    trainer.run()
+    if trainer.pt:
+        res = trainer.pt.flush()
+        if res is not None:
+            print(res.report())
+
+
+if __name__ == "__main__":
+    main()

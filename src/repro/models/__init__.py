@@ -1,0 +1,1 @@
+from repro.models.transformer import Transformer  # noqa: F401

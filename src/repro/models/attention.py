@@ -1,0 +1,245 @@
+"""Attention: GQA/MQA/MHA with a double-blocked online-softmax implementation
+(XLA "flash" — bounded activation memory, the lowering the dry-run measures),
+sliding-window + logit-softcap variants (gemma2), MLA (deepseek) with absorbed
+decode, and single-token decode paths against KV caches.
+
+The Pallas TPU kernel (repro.kernels.flash_attention) implements the same
+math with explicit VMEM tiling; this module is the distribution-friendly XLA
+path and the numerical oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, stack=(), dtype=jnp.float32):
+    d, H, KV, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (d, H, D), stack, dtype),
+        "wk": L.dense_init(ks[1], (d, KV, D), stack, dtype),
+        "wv": L.dense_init(ks[2], (d, KV, D), stack, dtype),
+        "wo": L.dense_init(ks[3], (H, D, d), stack, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(stack + (H, D), dtype)
+        p["bk"] = jnp.zeros(stack + (KV, D), dtype)
+        p["bv"] = jnp.zeros(stack + (KV, D), dtype)
+    return p
+
+
+def init_mla(key, cfg, stack=(), dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    r, nope, ro, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                       cfg.v_head_dim)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": L.dense_init(ks[0], (d, H, nope + ro), stack, dtype),
+        "wkv_down": L.dense_init(ks[1], (d, r + ro), stack, dtype),
+        "latent_norm": jnp.ones(stack + (r,), dtype),
+        "wk_up": L.dense_init(ks[2], (r, H, nope), stack, dtype),
+        "wv_up": L.dense_init(ks[3], (r, H, vd), stack, dtype),
+        "wo": L.dense_init(ks[4], (H, vd, d), stack, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core blocked attention: flash-style custom-VJP implementation
+# ---------------------------------------------------------------------------
+from repro.models.attention_core import (  # noqa: E402
+    AttnSpec, NEG_INF, _mask, blocked_attention)
+
+
+def attention_ref(q, k, v, spec: AttnSpec, q_offset=0, kv_len=None):
+    """Unblocked oracle for tests."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = spec.scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("btkgd,bskd->btkgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if spec.softcap:
+        s = jnp.tanh(s / spec.softcap) * spec.softcap
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = _mask(qpos, kpos, spec, kv_len)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block apply
+# ---------------------------------------------------------------------------
+
+def apply_gqa(p, x: Array, cfg, positions: Array, spec: AttnSpec,
+              impl=blocked_attention, dist=None, pad_heads=False) -> Array:
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    H, KV = q.shape[2], k.shape[2]
+    wo = p["wo"]
+    tp = dist.tp_size if dist is not None else 1
+    if pad_heads and dist is not None and tp > 1 and H % tp != 0:
+        # PHANTOM-HEAD PADDING (EXPERIMENTS §Perf H2): expand GQA kv to
+        # per-q-head layout and zero-pad q/k/v/wo to the next multiple of
+        # tp so every attention tensor shards evenly — kills the padded
+        # all-gather/reshard of the attention output. Phantom heads have
+        # zero v and zero wo rows, so outputs and gradients are exact.
+        G = H // KV
+        Hp = -(-H // tp) * tp
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        padw = ((0, 0), (0, 0), (0, Hp - H), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        wo = jnp.pad(wo, ((0, Hp - H), (0, 0), (0, 0)))
+    if dist is not None:
+        # steer the attention core to head sharding over TP
+        q = dist.constrain_heads(q)
+    out = impl(q, k, v, spec)
+    if dist is not None:
+        out = dist.constrain_heads(out)
+    return jnp.einsum("bshx,hxd->bsd", out, wo), (k, v)
+
+
+def gqa_decode(p, x: Array, cfg, pos: Array, k_cache: Array, v_cache: Array,
+               spec: AttnSpec, ring: bool = False):
+    """x: (B, 1, d); caches: (B, S_max, KV, D); pos: scalar current position.
+    Returns (out, new_k_cache, new_v_cache)."""
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q, pos[None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[None], cfg.rope_theta)
+    S_max = k_cache.shape[1]
+    slot = pos % S_max if ring else jnp.minimum(pos, S_max - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = spec.scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if spec.softcap:
+        s = jnp.tanh(s / spec.softcap) * spec.softcap
+    idx = jnp.arange(S_max)
+    if ring:
+        # ring buffer holds the last S_max tokens; until it wraps, only
+        # slots <= pos are live.
+        valid = jnp.where(pos >= S_max, jnp.ones((S_max,), bool), idx <= pos)
+    else:
+        valid = idx <= pos
+        if spec.window:
+            valid &= idx > pos - spec.window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, H, v_cache.shape[-1])
+    y = jnp.einsum("bshx,hxd->bsd", out.astype(x.dtype), p["wo"])
+    return y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def _mla_scale(cfg):
+    return (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+
+def apply_mla(p, x: Array, cfg, positions: Array, spec: AttnSpec,
+              impl=blocked_attention, dist=None):
+    """Training/prefill MLA: materialize per-head K/V from the latent (the
+    cache-compression advantage matters only at decode)."""
+    B, S, d = x.shape
+    H, r = cfg.num_heads, cfg.kv_lora_rank
+    nope, ro = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    down = jnp.einsum("bsd,dr->bsr", x, p["wkv_down"])
+    latent, k_rope = down[..., :r], down[..., r:]
+    latent = L.apply_norm({"scale": p["latent_norm"]}, latent, "rms",
+                          cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)          # (B,S,1,ro) shared head
+    k_nope = jnp.einsum("bsr,rhx->bshx", latent, p["wk_up"])
+    v = jnp.einsum("bsr,rhx->bshx", latent, p["wv_up"])
+
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kc = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, ro))], axis=-1)
+    sp = spec._replace(scale=_mla_scale(cfg))
+    if dist is not None:
+        qc = dist.constrain_heads(qc)
+        kc = dist.constrain_heads(kc)
+        v = dist.constrain_heads(v)
+    out = impl(qc, kc, v, sp)
+    return jnp.einsum("bshx,hxd->bsd", out, p["wo"]), (latent, k_rope[:, :, 0])
+
+
+def mla_decode(p, x: Array, cfg, pos: Array, latent_cache: Array,
+               krope_cache: Array, spec: AttnSpec):
+    """Absorbed MLA decode: cache only (latent r + rope ro) per token.
+    latent_cache: (B, S_max, r); krope_cache: (B, S_max, ro)."""
+    B = x.shape[0]
+    H, r = cfg.num_heads, cfg.kv_lora_rank
+    nope, ro = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])[:, 0]       # (B,H,nope+ro)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope[:, None], pos[None], cfg.rope_theta)[:, 0]
+
+    down = jnp.einsum("bsd,dr->bsr", x, p["wkv_down"])[:, 0]
+    latent, k_rope = down[..., :r], down[..., r:]
+    latent = L.apply_norm({"scale": p["latent_norm"]}, latent, "rms",
+                          cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, None, None, :], pos[None],
+                          cfg.rope_theta)[:, 0, 0]
+
+    latent_cache = jax.lax.dynamic_update_slice_in_dim(
+        latent_cache, latent[:, None], pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope[:, None], pos, axis=1)
+
+    # absorbed: q_nope through wk_up -> latent space
+    q_abs = jnp.einsum("bhx,rhx->bhr", q_nope, p["wk_up"])   # (B,H,r)
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs, latent_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhx,bsx->bhs", q_rope, krope_cache,
+                      preferred_element_type=jnp.float32))
+    s = s * _mla_scale(cfg)
+    valid = jnp.arange(latent_cache.shape[1]) <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr.astype(latent_cache.dtype),
+                       latent_cache)
+    out = jnp.einsum("bhr,rhx->bhx", o_lat, p["wv_up"])      # (B,H,vd)
+    y = jnp.einsum("bhx,hxd->bd", out.astype(x.dtype), p["wo"])
+    return y[:, None], latent_cache, krope_cache

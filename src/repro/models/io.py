@@ -1,0 +1,82 @@
+"""Model input construction: ShapeDtypeStruct specs for the dry-run (no
+allocation) and synthetic concrete batches for tests/examples.
+
+Modality frontends (vlm/audio) are STUBS per the assignment: ``input_specs``
+supplies precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import _dtype
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    """Logical (global) input shapes for a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, tuple] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            out["embeds"] = (B, S, cfg.d_model)
+        elif cfg.frontend == "vision":
+            F = cfg.frontend_tokens
+            out["embeds"] = (B, F, cfg.d_model)
+            out["tokens"] = (B, S - F)
+        else:
+            out["tokens"] = (B, S)
+        if shape.kind == "train":
+            out["labels"] = (B, S)
+    else:  # decode: one new token against a cache of size S
+        if cfg.frontend == "audio":
+            out["embeds"] = (B, 1, cfg.d_model)
+        else:
+            out["tokens"] = (B, 1)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    dt = _dtype(cfg.dtype)
+    specs = {}
+    for name, shp in batch_shapes(cfg, shape).items():
+        kind = jnp.int32 if name in ("tokens", "labels") else dt
+        specs[name] = jax.ShapeDtypeStruct(shp, kind)
+    return specs
+
+
+def synth_batch(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                seed: int = 0) -> Dict[str, jax.Array]:
+    """Concrete synthetic batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    dt = _dtype(cfg.dtype)
+    out: Dict[str, jax.Array] = {}
+    if kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            out["embeds"] = jnp.asarray(
+                rng.normal(size=(batch, seq, cfg.d_model)), dt)
+        elif cfg.frontend == "vision":
+            F = min(cfg.frontend_tokens, seq - 1)
+            out["embeds"] = jnp.asarray(
+                rng.normal(size=(batch, F, cfg.d_model)), dt)
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq - F)), jnp.int32)
+        else:
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+        if kind == "train":
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    else:
+        if cfg.frontend == "audio":
+            out["embeds"] = jnp.asarray(
+                rng.normal(size=(batch, 1, cfg.d_model)), dt)
+        else:
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32)
+    return out

@@ -1,0 +1,216 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD: intra-chunk quadratic-in-chunk matmul form + inter-chunk linear
+state recurrence (lax.scan over chunks). This is the XLA path the dry-run
+lowers; repro.kernels.ssd_scan is the Pallas TPU kernel for the intra-chunk
+hot loop, and repro.kernels.ref holds the naive recurrent oracle.
+
+Projections are kept SEPARATE (w_z / w_x / w_B / w_C / w_dt) rather than one
+fused in_proj so tensor parallelism can shard the head/channel dims over the
+model axis without resharding splits (DESIGN.md §4): heads are sharded
+(80/16=5 for mamba2, 112/16=7 for zamba2), B/C group projections are small
+and replicated.
+
+Shapes: x (B, S, d_model); internal head layout (B, S, H, P) with
+P = ssm_head_dim, state N = ssm_state, groups G (B/C shared per group).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def init_mamba2(key, cfg, stack=(), dtype=jnp.float32):
+    d = cfg.d_model
+    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H, W = cfg.ssm_heads, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    # dt bias: softplus^-1(dt) for dt ~ U[1e-3, 1e-1]
+    u = jax.random.uniform(ks[0], stack + (H,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    a = jax.random.uniform(ks[1], stack + (H,), jnp.float32, 1.0, 16.0)
+
+    def conv(key, ch):
+        w = jax.random.normal(key, stack + (ch, W), jnp.float32)
+        return (w / math.sqrt(W)).astype(dtype)
+
+    return {
+        "w_z": L.dense_init(ks[2], (d, di), stack, dtype),
+        "w_x": L.dense_init(ks[3], (d, di), stack, dtype),
+        "w_B": L.dense_init(ks[4], (d, G * N), stack, dtype),
+        "w_C": L.dense_init(ks[5], (d, G * N), stack, dtype),
+        "w_dt": L.dense_init(ks[6], (d, H), stack, dtype),
+        "conv_x_w": conv(ks[7], di),
+        "conv_x_b": jnp.zeros(stack + (di,), dtype),
+        "conv_B_w": conv(ks[0], G * N),
+        "conv_B_b": jnp.zeros(stack + (G * N,), dtype),
+        "conv_C_w": conv(ks[1], G * N),
+        "conv_C_b": jnp.zeros(stack + (G * N,), dtype),
+        "A_log": jnp.log(a).astype(jnp.float32),
+        "D": jnp.ones(stack + (H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gate_norm": jnp.ones(stack + (di,), dtype),
+        "out_proj": L.dense_init(ks[6], (di, d), stack, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (B, S, C); w: (C, W)."""
+    W = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32).T[:, None, :],      # (W, I=1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+    x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H) negative;
+    Bm/Cm: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(state, inp):
+        xq, dtq, Bq, Cq = inp                    # per-chunk blocks
+        dA = (dtq * A).astype(jnp.float32)       # (B,Q,H), negative
+        cum = jnp.cumsum(dA, axis=1)             # (B,Q,H)
+        # ---- intra-chunk (quadratic in Q) --------------------------------
+        CB = jnp.einsum("btgn,bsgn->bgts", Cq, Bq,
+                        preferred_element_type=jnp.float32)   # (B,G,Q,Q)
+        CB = jnp.repeat(CB, rep, axis=1)                      # (B,H,Q,Q)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,s,H)
+        Lmat = jnp.where(tril[None, :, :, None], dec, 0.0)
+        Lmat = Lmat * dtq[:, None, :, :]                      # weight dt_s
+        scores = CB.transpose(0, 2, 3, 1) * Lmat              # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores.astype(xq.dtype), xq,
+                             preferred_element_type=jnp.float32)
+        # ---- inter-chunk (state from previous chunks) --------------------
+        Ch = jnp.repeat(Cq, rep, axis=2)                      # (B,Q,H,N)
+        y_inter = jnp.einsum("bthn,bhnp->bthp", Ch.astype(jnp.float32),
+                             state) * jnp.exp(cum)[..., None]
+        # ---- state update --------------------------------------------------
+        decay_end = jnp.exp(cum[:, -1:, :] - cum) * dtq       # (B,Q,H)
+        Bh = jnp.repeat(Bq, rep, axis=2)                      # (B,Q,H,N)
+        ds = jnp.einsum("bqhn,bqhp,bqh->bhnp", Bh.astype(jnp.float32),
+                        xq.astype(jnp.float32), decay_end)
+        state = state * jnp.exp(cum[:, -1, :])[..., None, None] + ds
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    state0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    final, yc = jax.lax.scan(body, state0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def apply_mamba2(p, x: Array, cfg, impl=ssd_chunked) -> Array:
+    """Full Mamba2 block (train/prefill)."""
+    di, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    Bsz, S, _ = x.shape
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+    xs = jnp.einsum("bsd,dk->bsk", x, p["w_x"])
+    Bm = jnp.einsum("bsd,dk->bsk", x, p["w_B"])
+    Cm = jnp.einsum("bsd,dk->bsk", x, p["w_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x_w"], p["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B_w"], p["conv_B_b"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C_w"], p["conv_C_b"]))
+    xs = xs.reshape(Bsz, S, H, P)
+    Bm = Bm.reshape(Bsz, S, G, N)
+    Cm = Cm.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = impl(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.apply_norm({"scale": p["gate_norm"]}, y, "rms", cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token recurrent step)
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch, stack=(), dtype=jnp.float32):
+    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    W = cfg.conv_width
+    return {
+        "conv_x": jnp.zeros(stack + (batch, W - 1, di), dtype),
+        "conv_B": jnp.zeros(stack + (batch, W - 1, G * N), dtype),
+        "conv_C": jnp.zeros(stack + (batch, W - 1, G * N), dtype),
+        "state": jnp.zeros(stack + (batch, cfg.ssm_heads, N,
+                                    cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def _conv_step(window_prev, x_new, w, b):
+    """window_prev: (B, W-1, C); x_new: (B, C). Returns (out (B,C), window)."""
+    window = jnp.concatenate([window_prev, x_new[:, None, :]], axis=1)
+    out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return (out + b.astype(jnp.float32)).astype(x_new.dtype), window[:, 1:, :]
+
+
+def mamba2_decode(p, x: Array, cfg, cache):
+    """x: (B, 1, d). Returns (y (B,1,d), new_cache)."""
+    di, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    B = x.shape[0]
+    x0 = x[:, 0]
+    z = x0 @ p["w_z"]
+    xs = x0 @ p["w_x"]
+    Bm = x0 @ p["w_B"]
+    Cm = x0 @ p["w_C"]
+    dt_raw = x0 @ p["w_dt"]
+    xs, conv_x = _conv_step(cache["conv_x"], xs, p["conv_x_w"], p["conv_x_b"])
+    Bm, conv_B = _conv_step(cache["conv_B"], Bm, p["conv_B_w"], p["conv_B_b"])
+    Cm, conv_C = _conv_step(cache["conv_C"], Cm, p["conv_C_w"], p["conv_C_b"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    xs = xs.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)          # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                       # (B,H)
+    state = (cache["state"] * a[..., None, None]
+             + jnp.einsum("bhn,bhp,bh->bhnp", Bh.astype(jnp.float32),
+                          xs.astype(jnp.float32), dt))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.apply_norm({"scale": p["gate_norm"]}, y, "rms", cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "state": state}
+    return out, new_cache

@@ -1,0 +1,552 @@
+"""Model assembly: every assigned architecture family (dense / moe / ssm /
+hybrid / vlm / audio) built from the blocks in this package, with
+scan-over-layers (stacked params — keeps HLO O(1 layer)), KV/SSM caches, and
+single-token decode. Pure-functional; distribution enters only through the
+optional ``dist`` context (sharding constraints + MoE shard_map).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Array = jax.Array
+
+
+def _dt(cfg):
+    return L._dtype(cfg.dtype)
+
+
+def _pdt(cfg):
+    return L._dtype(cfg.param_dtype)
+
+
+def attn_spec(cfg, window: int, folded: bool = False) -> A.AttnSpec:
+    return A.AttnSpec(causal=True, window=window, softcap=cfg.attn_softcap,
+                      scale=cfg.attn_scale, folded=folded)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_norms(key, cfg, stack):
+    p = {"ln1": L.init_norm(cfg.norm, cfg.d_model, stack, _pdt(cfg)),
+         "ln2": L.init_norm(cfg.norm, cfg.d_model, stack, _pdt(cfg))}
+    if cfg.post_norms:
+        p["ln1p"] = L.init_norm(cfg.norm, cfg.d_model, stack, _pdt(cfg))
+        p["ln2p"] = L.init_norm(cfg.norm, cfg.d_model, stack, _pdt(cfg))
+    return p
+
+
+def init_attn_block(key, cfg, stack=(), d_ff=None, moe=False):
+    ks = jax.random.split(key, 3)
+    p = _init_norms(ks[0], cfg, stack)
+    if cfg.attention == "mla":
+        p["attn"] = A.init_mla(ks[1], cfg, stack, _pdt(cfg))
+    else:
+        p["attn"] = A.init_gqa(ks[1], cfg, stack, _pdt(cfg))
+    if moe:
+        p["moe"] = M.init_moe(ks[2], cfg, stack, _pdt(cfg))
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg.d_model, d_ff or cfg.d_ff, cfg.mlp,
+                              cfg.use_bias, stack, _pdt(cfg))
+    return p
+
+
+def init_mamba_block(key, cfg, stack=()):
+    k1, k2 = jax.random.split(key)
+    return {"ln": L.init_norm(cfg.norm, cfg.d_model, stack, _pdt(cfg)),
+            "mamba": S.init_mamba2(k2, cfg, stack, _pdt(cfg))}
+
+
+def apply_attn_block(bp, x, cfg, positions, spec, dist=None,
+                     impl=A.blocked_attention, pad_heads=False):
+    """Returns (x, aux_stats or None, (k, v)-like cache entries)."""
+    h = L.apply_norm(bp["ln1"], x, cfg.norm, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, kv = A.apply_mla(bp["attn"], h, cfg, positions, spec, impl, dist)
+    else:
+        a, kv = A.apply_gqa(bp["attn"], h, cfg, positions, spec, impl, dist,
+                            pad_heads)
+    if cfg.post_norms:
+        a = L.apply_norm(bp["ln1p"], a, cfg.norm, cfg.norm_eps)
+    x = _constrain(x + a, dist)
+    h = L.apply_norm(bp["ln2"], x, cfg.norm, cfg.norm_eps)
+    stats = None
+    if "moe" in bp:
+        m, stats = M.apply_moe(bp["moe"], h, cfg, dist)
+    else:
+        m = L.apply_mlp(bp["mlp"], h, cfg.mlp)
+    if cfg.post_norms:
+        m = L.apply_norm(bp["ln2p"], m, cfg.norm, cfg.norm_eps)
+    return _constrain(x + m, dist), stats, kv
+
+
+def apply_mamba_block(bp, x, cfg, dist=None, impl=S.ssd_chunked,
+                      return_cache=False):
+    h = L.apply_norm(bp["ln"], x, cfg.norm, cfg.norm_eps)
+    y = S.apply_mamba2(bp["mamba"], h, cfg, impl)
+    return _constrain(x + y, dist)
+
+
+def decode_attn_block(bp, x, cfg, pos, cache, spec, dist=None, ring=False):
+    h = L.apply_norm(bp["ln1"], x, cfg.norm, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, lat, kr = A.mla_decode(bp["attn"], h, cfg, pos, cache["latent"],
+                                  cache["krope"], spec)
+        new_cache = {"latent": lat, "krope": kr}
+    else:
+        a, kc, vc = A.gqa_decode(bp["attn"], h, cfg, pos, cache["k"],
+                                 cache["v"], spec, ring=ring)
+        new_cache = {"k": kc, "v": vc}
+    if cfg.post_norms:
+        a = L.apply_norm(bp["ln1p"], a, cfg.norm, cfg.norm_eps)
+    x = x + a
+    h = L.apply_norm(bp["ln2"], x, cfg.norm, cfg.norm_eps)
+    if "moe" in bp:
+        m, _ = M.apply_moe(bp["moe"], h, cfg, dist)
+    else:
+        m = L.apply_mlp(bp["mlp"], h, cfg.mlp)
+    if cfg.post_norms:
+        m = L.apply_norm(bp["ln2p"], m, cfg.norm, cfg.norm_eps)
+    return x + m, new_cache
+
+
+def decode_mamba_block(bp, x, cfg, cache, dist=None):
+    h = L.apply_norm(bp["ln"], x, cfg.norm, cfg.norm_eps)
+    y, new_cache = S.mamba2_decode(bp["mamba"], h, cfg, cache)
+    return x + y, new_cache
+
+
+def _constrain(x, dist):
+    return dist.constrain_act(x) if dist is not None else x
+
+
+# ---------------------------------------------------------------------------
+# Transformer (all families)
+# ---------------------------------------------------------------------------
+
+class Transformer:
+    """Functional model wrapper for one ModelConfig."""
+
+    def __init__(self, cfg, dist=None, attn_impl=None, remat: str = "none",
+                 folded: bool = False, pad_heads: bool = False):
+        self.cfg = cfg
+        self.dist = dist
+        self.attn_impl = attn_impl or A.blocked_attention
+        self.remat = remat
+        self.folded = folded  # balanced causal folding (EXPERIMENTS §Perf)
+        self.pad_heads = pad_heads  # phantom-head TP padding (§Perf)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p: Dict[str, Any] = {
+            "embed": L.init_embed(ks[0], cfg.padded_vocab, cfg.d_model,
+                                  _pdt(cfg)),
+            "final_norm": L.init_norm(cfg.norm, cfg.d_model, (), _pdt(cfg)),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_init(ks[1], (cfg.padded_vocab, cfg.d_model),
+                                        (), _pdt(cfg))
+        if cfg.frontend:
+            p["frontend"] = L.dense_init(ks[2], (cfg.d_model, cfg.d_model),
+                                         (), _pdt(cfg))
+        fam = cfg.family
+        if fam in ("dense", "vlm", "audio"):
+            if cfg.local_global:  # gemma2: stacked (L/2, 2) pairs
+                assert cfg.num_layers % 2 == 0
+                p["blocks"] = init_attn_block(
+                    ks[3], cfg, (cfg.num_layers // 2, 2))
+            else:
+                p["blocks"] = init_attn_block(ks[3], cfg, (cfg.num_layers,))
+        elif fam == "moe":
+            if cfg.moe_every == 2:  # llama4: (dense, moe) pairs
+                n_pair = cfg.num_layers // 2
+                p["pair_dense"] = init_attn_block(
+                    ks[3], cfg, (n_pair,), d_ff=cfg.dense_d_ff)
+                p["pair_moe"] = init_attn_block(ks[4], cfg, (n_pair,),
+                                                moe=True)
+            else:  # deepseek: first layer dense, rest MoE
+                nd = cfg.first_dense
+                if nd:
+                    p["dense0"] = init_attn_block(ks[3], cfg, (nd,),
+                                                  d_ff=cfg.dense_d_ff)
+                p["blocks"] = init_attn_block(
+                    ks[4], cfg, (cfg.num_layers - nd,), moe=True)
+        elif fam == "ssm":
+            p["blocks"] = init_mamba_block(ks[3], cfg, (cfg.num_layers,))
+        elif fam == "hybrid":
+            k = cfg.shared_attn_every
+            ngroups, tail = divmod(cfg.num_layers, k)
+            p["groups"] = init_mamba_block(ks[3], cfg, (ngroups, k))
+            if tail:
+                p["tail"] = init_mamba_block(ks[4], cfg, (tail,))
+            p["shared_attn"] = init_attn_block(ks[5], cfg, ())
+        else:
+            raise ValueError(fam)
+        return p
+
+    # -- embedding ------------------------------------------------------------
+    def _embed_inputs(self, p, batch):
+        cfg = self.cfg
+        parts = []
+        if cfg.frontend and "embeds" in batch:
+            fe = jnp.einsum("bsd,de->bse",
+                            batch["embeds"].astype(_dt(cfg)), p["frontend"])
+            parts.append(fe)
+        if batch.get("tokens") is not None:
+            parts.append(L.embed_lookup(p["embed"], batch["tokens"],
+                                        cfg.scale_embed, cfg.d_model)
+                         .astype(_dt(cfg)))
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        return _constrain(x, self.dist)
+
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if self.remat == "dots" else None)
+        return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+    # -- forward (train / prefill) -------------------------------------------
+    def forward(self, p, batch, collect_cache: bool = False):
+        """Returns (hidden (B,S,d), aux_stats or None, cache or None)."""
+        cfg, dist, impl = self.cfg, self.dist, self.attn_impl
+        x = self._embed_inputs(p, batch)
+        B, Sq, _ = x.shape
+        positions = jnp.arange(Sq)[None, :]
+        sw_spec = attn_spec(cfg, cfg.sliding_window, self.folded)
+        full_spec = attn_spec(cfg, 0, self.folded)
+        stats_sum = None
+        cache = {}
+
+        fam = cfg.family
+        if fam in ("dense", "vlm", "audio"):
+            spec = sw_spec if cfg.sliding_window and not cfg.local_global \
+                else full_spec
+            if cfg.local_global:
+                def pair_body(h, bp):
+                    h, _, kv_l = apply_attn_block(
+                        jax.tree_util.tree_map(lambda a: a[0], bp), h, cfg,
+                        positions, sw_spec, dist, impl, self.pad_heads)
+                    h, _, kv_g = apply_attn_block(
+                        jax.tree_util.tree_map(lambda a: a[1], bp), h, cfg,
+                        positions, full_spec, dist, impl, self.pad_heads)
+                    kv = jax.tree_util.tree_map(
+                        lambda a, b: jnp.stack([a, b]), kv_l, kv_g)
+                    return h, (kv if collect_cache else None)
+                x, kvs = jax.lax.scan(self._maybe_remat(pair_body), x,
+                                      p["blocks"])
+            else:
+                def body(h, bp):
+                    h, _, kv = apply_attn_block(bp, h, cfg, positions, spec,
+                                                dist, impl, self.pad_heads)
+                    return h, (kv if collect_cache else None)
+                x, kvs = jax.lax.scan(self._maybe_remat(body), x, p["blocks"])
+            if collect_cache:
+                cache["kv"] = kvs
+
+        elif fam == "moe":
+            if cfg.moe_every == 2:
+                def pair_body(h, bps):
+                    bpd, bpm = bps
+                    h, _, kv_d = apply_attn_block(bpd, h, cfg, positions,
+                                                  full_spec, dist, impl,
+                                                  self.pad_heads)
+                    h, st, kv_m = apply_attn_block(bpm, h, cfg, positions,
+                                                   full_spec, dist, impl,
+                                                   self.pad_heads)
+                    kv = jax.tree_util.tree_map(
+                        lambda a, b: jnp.stack([a, b]), kv_d, kv_m)
+                    return h, (st, kv if collect_cache else None)
+                x, (stats, kvs) = jax.lax.scan(
+                    self._maybe_remat(pair_body), x,
+                    (p["pair_dense"], p["pair_moe"]))
+                stats_sum = stats.sum(axis=0)
+            else:
+                if "dense0" in p:
+                    def d0_body(h, bp):
+                        h, _, kv = apply_attn_block(bp, h, cfg, positions,
+                                                    full_spec, dist, impl,
+                                                    self.pad_heads)
+                        return h, (kv if collect_cache else None)
+                    x, kv0 = jax.lax.scan(self._maybe_remat(d0_body), x,
+                                          p["dense0"])
+                    if collect_cache:
+                        cache["kv0"] = kv0
+
+                def moe_body(h, bp):
+                    h, st, kv = apply_attn_block(bp, h, cfg, positions,
+                                                 full_spec, dist, impl,
+                                                 self.pad_heads)
+                    return h, (st, kv if collect_cache else None)
+                x, (stats, kvs) = jax.lax.scan(self._maybe_remat(moe_body),
+                                               x, p["blocks"])
+                stats_sum = stats.sum(axis=0)
+            if collect_cache:
+                cache["kv"] = kvs
+
+        elif fam == "ssm":
+            def body(h, bp):
+                return apply_mamba_block(bp, h, cfg, dist), None
+            x, _ = jax.lax.scan(self._maybe_remat(body), x, p["blocks"])
+
+        elif fam == "hybrid":
+            sa = p["shared_attn"]
+
+            def group_body(h, bp):
+                def inner(h2, bpi):
+                    return apply_mamba_block(bpi, h2, cfg, dist), None
+                h, _ = jax.lax.scan(inner, h, bp)
+                h, _, kv = apply_attn_block(sa, h, cfg, positions, sw_spec,
+                                            dist, impl, self.pad_heads)
+                return h, (kv if collect_cache else None)
+            x, kvs = jax.lax.scan(self._maybe_remat(group_body), x,
+                                  p["groups"])
+            if collect_cache:
+                cache["kv"] = kvs
+            if "tail" in p:
+                def tail_body(h, bp):
+                    return apply_mamba_block(bp, h, cfg, dist), None
+                x, _ = jax.lax.scan(self._maybe_remat(tail_body), x,
+                                    p["tail"])
+        else:
+            raise ValueError(fam)
+
+        x = L.apply_norm(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return x, stats_sum, (cache if collect_cache else None)
+
+    def logits(self, p, hidden):
+        cfg = self.cfg
+        head = p["embed"]["table"] if cfg.tie_embeddings else p["lm_head"]
+        out = L.lm_logits(head, hidden, cfg.logit_softcap)
+        return _constrain_logits(out, self.dist)
+
+    # -- losses ---------------------------------------------------------------
+    def loss(self, p, batch):
+        cfg = self.cfg
+        hidden, stats, _ = self.forward(p, batch)
+        logits = self.logits(p, hidden)
+        labels = batch["labels"]
+        nll, ntok = L.cross_entropy(logits, labels, cfg.vocab_size)
+        aux = jnp.zeros((), jnp.float32)
+        if stats is not None and cfg.is_moe:
+            n_moe = (cfg.num_layers // cfg.moe_every if cfg.moe_every > 1
+                     else cfg.num_layers - cfg.first_dense)
+            total_tokens = labels.shape[0] * labels.shape[1] * max(1, n_moe)
+            aux = M.aux_loss_from_stats(stats, cfg, float(total_tokens))
+        metrics = {"nll": nll, "aux": aux, "ntok": ntok}
+        return nll + aux, metrics
+
+    # -- decode ---------------------------------------------------------------
+    def kv_len(self, max_len: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window and max_len > cfg.sliding_window \
+                and not cfg.local_global:
+            return cfg.sliding_window
+        return max_len
+
+    def init_cache(self, batch: int, max_len: int, make=jnp.zeros):
+        """Concrete (or abstract via make=jax.ShapeDtypeStruct-compatible)
+        decode cache pytree."""
+        cfg = self.cfg
+        dt = _dt(cfg)
+        kvl = self.kv_len(max_len)
+
+        def kv(stack):
+            if cfg.attention == "mla":
+                return {
+                    "latent": make(stack + (batch, max_len,
+                                            cfg.kv_lora_rank), dt),
+                    "krope": make(stack + (batch, max_len,
+                                           cfg.qk_rope_dim), dt),
+                }
+            return {
+                "k": make(stack + (batch, kvl, cfg.num_kv_heads,
+                                   cfg.head_dim), dt),
+                "v": make(stack + (batch, kvl, cfg.num_kv_heads,
+                                   cfg.head_dim), dt),
+            }
+
+        def kv_full(stack):  # gemma2 global layers need full length
+            return {
+                "k": make(stack + (batch, max_len, cfg.num_kv_heads,
+                                   cfg.head_dim), dt),
+                "v": make(stack + (batch, max_len, cfg.num_kv_heads,
+                                   cfg.head_dim), dt),
+            }
+
+        def ssm(stack):
+            di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+            W = cfg.conv_width
+            return {
+                "conv_x": make(stack + (batch, W - 1, di), dt),
+                "conv_B": make(stack + (batch, W - 1, G * N), dt),
+                "conv_C": make(stack + (batch, W - 1, G * N), dt),
+                "state": make(stack + (batch, cfg.ssm_heads, N,
+                                       cfg.ssm_head_dim), jnp.float32),
+            }
+
+        fam = cfg.family
+        if fam in ("dense", "vlm", "audio"):
+            if cfg.local_global:
+                return {"local": kv((cfg.num_layers // 2,)),
+                        "global": kv_full((cfg.num_layers // 2,))}
+            return {"kv": kv((cfg.num_layers,))}
+        if fam == "moe":
+            if cfg.moe_every == 2:
+                return {"kv": kv((cfg.num_layers // 2, 2))}
+            c = {"kv": kv((cfg.num_layers - cfg.first_dense,))}
+            if cfg.first_dense:
+                c["kv0"] = kv((cfg.first_dense,))
+            return c
+        if fam == "ssm":
+            return {"ssm": ssm((cfg.num_layers,))}
+        if fam == "hybrid":
+            k = cfg.shared_attn_every
+            ngroups, tail = divmod(cfg.num_layers, k)
+            c = {"ssm": ssm((ngroups, k)), "attn": kv((ngroups,))}
+            if tail:
+                c["ssm_tail"] = ssm((tail,))
+            return c
+        raise ValueError(fam)
+
+    def decode_step(self, p, cache, batch, pos):
+        """One token for the whole batch. batch: {'tokens': (B,1)} or
+        {'embeds': (B,1,d)}; pos: scalar int32 (current position).
+        Returns (logits (B,1,V), new_cache)."""
+        cfg, dist = self.cfg, self.dist
+        x = self._embed_inputs(p, batch)
+        sw_spec = attn_spec(cfg, cfg.sliding_window)
+        full_spec = attn_spec(cfg, 0)
+        kvl_ring = (cfg.sliding_window and not cfg.local_global
+                    and self._ring_for(cache))
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "audio"):
+            if cfg.local_global:
+                def pair_body(h, xs):
+                    bp, cl, cg = xs
+                    bpl = jax.tree_util.tree_map(lambda a: a[0], bp)
+                    bpg = jax.tree_util.tree_map(lambda a: a[1], bp)
+                    h, cl = decode_attn_block(bpl, h, cfg, pos, cl, sw_spec,
+                                              dist)
+                    h, cg = decode_attn_block(bpg, h, cfg, pos, cg, full_spec,
+                                              dist)
+                    return h, (cl, cg)
+                x, (ncl, ncg) = jax.lax.scan(
+                    pair_body, x, (p["blocks"], cache["local"],
+                                   cache["global"]))
+                new_cache = {"local": ncl, "global": ncg}
+            else:
+                spec = sw_spec if cfg.sliding_window else full_spec
+
+                def body(h, xs):
+                    bp, c = xs
+                    h, c = decode_attn_block(bp, h, cfg, pos, c, spec, dist,
+                                             ring=kvl_ring)
+                    return h, c
+                x, nkv = jax.lax.scan(body, x, (p["blocks"], cache["kv"]))
+                new_cache = {"kv": nkv}
+
+        elif fam == "moe":
+            if cfg.moe_every == 2:
+                def pair_body(h, xs):
+                    bpd, bpm, c = xs
+                    cd = jax.tree_util.tree_map(lambda a: a[0], c)
+                    cm = jax.tree_util.tree_map(lambda a: a[1], c)
+                    h, cd = decode_attn_block(bpd, h, cfg, pos, cd, full_spec,
+                                              dist)
+                    h, cm = decode_attn_block(bpm, h, cfg, pos, cm, full_spec,
+                                              dist)
+                    return h, jax.tree_util.tree_map(
+                        lambda a, b: jnp.stack([a, b]), cd, cm)
+                x, nkv = jax.lax.scan(pair_body, x,
+                                      (p["pair_dense"], p["pair_moe"],
+                                       cache["kv"]))
+                new_cache = {"kv": nkv}
+            else:
+                new_cache = {}
+                if "dense0" in p:
+                    def d0(h, xs):
+                        bp, c = xs
+                        h, c = decode_attn_block(bp, h, cfg, pos, c,
+                                                 full_spec, dist)
+                        return h, c
+                    x, nkv0 = jax.lax.scan(d0, x, (p["dense0"],
+                                                   cache["kv0"]))
+                    new_cache["kv0"] = nkv0
+
+                def body(h, xs):
+                    bp, c = xs
+                    h, c = decode_attn_block(bp, h, cfg, pos, c, full_spec,
+                                             dist)
+                    return h, c
+                x, nkv = jax.lax.scan(body, x, (p["blocks"], cache["kv"]))
+                new_cache["kv"] = nkv
+
+        elif fam == "ssm":
+            def body(h, xs):
+                bp, c = xs
+                h, c = decode_mamba_block(bp, h, cfg, c, dist)
+                return h, c
+            x, nssm = jax.lax.scan(body, x, (p["blocks"], cache["ssm"]))
+            new_cache = {"ssm": nssm}
+
+        elif fam == "hybrid":
+            sa = p["shared_attn"]
+            # ring buffer when the attn cache was allocated window-sized
+            ring = bool(cfg.sliding_window) and (
+                cache["attn"]["k"].shape[-3] == cfg.sliding_window)
+
+            def group_body(h, xs):
+                bp, cs, ca = xs
+
+                def inner(h2, xsi):
+                    bpi, ci = xsi
+                    h2, ci = decode_mamba_block(bpi, h2, cfg, ci, dist)
+                    return h2, ci
+                h, cs = jax.lax.scan(inner, h, (bp, cs))
+                h, ca = decode_attn_block(sa, h, cfg, pos, ca, sw_spec, dist,
+                                          ring=ring)
+                return h, (cs, ca)
+            x, (nssm, nattn) = jax.lax.scan(
+                group_body, x, (p["groups"], cache["ssm"], cache["attn"]))
+            new_cache = {"ssm": nssm, "attn": nattn}
+            if "tail" in p:
+                def tail_body(h, xs):
+                    bp, c = xs
+                    h, c = decode_mamba_block(bp, h, cfg, c, dist)
+                    return h, c
+                x, ntail = jax.lax.scan(tail_body, x,
+                                        (p["tail"], cache["ssm_tail"]))
+                new_cache["ssm_tail"] = ntail
+        else:
+            raise ValueError(fam)
+
+        x = L.apply_norm(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return self.logits(p, x), new_cache
+
+    def _ring_for(self, cache) -> bool:
+        cfg = self.cfg
+        if not cfg.sliding_window or cfg.local_global:
+            return False
+        kv = cache.get("kv") or cache.get("attn")
+        if kv is None or "k" not in kv:
+            return False
+        # ring buffer when the allocated cache is window-sized
+        return kv["k"].shape[-3] == cfg.sliding_window
+
+
+def _constrain_logits(x, dist):
+    return dist.constrain_logits(x) if dist is not None else x

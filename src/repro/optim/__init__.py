@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, OptConfig, lr_schedule, global_norm  # noqa: F401

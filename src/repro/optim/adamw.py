@@ -1,0 +1,121 @@
+"""AdamW from scratch (no optax): fp32 master weights + moments, global-norm
+clipping, name-based weight-decay masking, warmup+cosine schedule.
+
+State layout mirrors the param tree so the FSDP/TP shardings of the params
+apply leaf-for-leaf to m / v / master (ZeRO-3: optimizer state is sharded
+exactly like its parameter).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NO_DECAY_TOKENS = ("norm", "scale", "bias", "ln", "A_log", "dt_bias",
+                   "/D", "bi", "bo", "bq", "bk", "bv")
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(c: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, c.warmup_steps)
+    prog = (step - c.warmup_steps) / jnp.maximum(
+        1.0, c.total_steps - c.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = c.min_lr_ratio + (1 - c.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return c.lr_peak * jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def _decay_mask(params) -> Any:
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        return not any(t in path for t in NO_DECAY_TOKENS)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+class AdamW:
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+
+    def init(self, params) -> Dict[str, Any]:
+        f32 = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        # copy=True: master must never alias the (donatable) param buffers
+        master = jax.tree_util.tree_map(
+            lambda x: jnp.array(x, dtype=jnp.float32, copy=True), params)
+        return {"m": f32(params), "v": f32(params), "master": master,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params) -> Tuple[Any, Dict[str, Any],
+                                                    Dict[str, jax.Array]]:
+        c = self.cfg
+        step = state["step"] + 1
+        lr = lr_schedule(c, step)
+        g32 = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(g32)
+        scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+            if c.clip_norm else jnp.float32(1.0)
+        g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+        b1c = 1 - c.b1 ** step.astype(jnp.float32)
+        b2c = 1 - c.b2 ** step.astype(jnp.float32)
+        mask = _decay_mask(params)
+
+        def upd(g, m, v, w, decay):
+            m = c.b1 * m + (1 - c.b1) * g
+            v = c.b2 * v + (1 - c.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + c.eps)
+            if decay:
+                delta = delta + c.weight_decay * w
+            return m, v, w - lr * delta
+
+        flat_g, treedef = jax.tree_util.tree_flatten(g32)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_w = treedef.flatten_up_to(state["master"])
+        flat_mask = treedef.flatten_up_to(mask)
+        new_m, new_v, new_w = [], [], []
+        for g, m, v, w, dk in zip(flat_g, flat_m, flat_v, flat_w, flat_mask):
+            m2, v2, w2 = upd(g, m, v, w, dk)
+            new_m.append(m2); new_v.append(v2); new_w.append(w2)
+        master = jax.tree_util.tree_unflatten(treedef, new_w)
+        new_state = {
+            "m": jax.tree_util.tree_unflatten(treedef, new_m),
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+            "master": master,
+            "step": step,
+        }
+        new_params = jax.tree_util.tree_map(
+            lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+    def state_shardings(self, param_shardings, replicated):
+        """Shardings for the opt state given the params' shardings.
+        ``replicated`` is a NamedSharding for scalars."""
+        return {"m": param_shardings, "v": param_shardings,
+                "master": param_shardings, "step": replicated}

@@ -1,0 +1,101 @@
+"""Gradient compression for cross-pod (DCN) data parallelism.
+
+At 1000+ nodes the inter-pod gradient all-reduce crosses the slowest fabric.
+Two compressors:
+
+  * ``bf16``  — cast grads to bf16 for the reduction (2x traffic cut;
+    error-free in practice at LLM scales);
+  * ``int8``  — per-tensor symmetric int8 quantization with ERROR FEEDBACK
+    (residual carried in the optimizer state; Seide et al. / 1-bit-SGD
+    lineage): 4x traffic cut, unbiased in the long run.
+
+``compressed_psum`` runs inside shard_map over the pod axis; the in-pod
+reduction stays full precision (ICI is cheap), only the DCN hop is
+compressed — the hierarchical schedule from DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree_int8(grads, residual):
+    """Error feedback: g' = g + residual; transmit Q(g'); residual = g'-Q."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return (q, s), gf - deq
+
+    qs = jax.tree_util.tree_map(one, grads, residual,
+                                is_leaf=lambda x: isinstance(x, jax.Array))
+    quant = jax.tree_util.tree_map(lambda t: t[0], qs,
+                                   is_leaf=lambda t: isinstance(t, tuple)
+                                   and len(t) == 2)
+    new_res = jax.tree_util.tree_map(lambda t: t[1], qs,
+                                     is_leaf=lambda t: isinstance(t, tuple)
+                                     and len(t) == 2)
+    return quant, new_res
+
+
+def psum_compressed(grads, axis_name: str, method: str = "bf16",
+                    residual=None):
+    """All-reduce ``grads`` over ``axis_name`` with compression. Returns
+    (mean_grads_f32, new_residual). Call inside shard_map."""
+    if method == "none":
+        out = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g.astype(jnp.float32), axis_name), grads)
+        return out, residual
+    if method == "bf16":
+        out = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g.astype(jnp.bfloat16),
+                                    axis_name).astype(jnp.float32), grads)
+        return out, residual
+    if method == "int8":
+        if residual is None:
+            residual = jax.tree_util.tree_map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            # SHARED scale across the axis (tiny pmax of a scalar) so the
+            # int32-summed payload dequantizes exactly
+            s = jax.lax.pmax(jnp.max(jnp.abs(gf)) / 127.0 + 1e-30,
+                             axis_name)
+            q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+            new_r = gf - q.astype(jnp.float32) * s
+            tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+            return tot.astype(jnp.float32) * s / n, new_r
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        outs, ress = [], []
+        for g, r in zip(flat_g, flat_r):
+            o, nr = one(g, r)
+            outs.append(o)
+            ress.append(nr)
+        return (jax.tree_util.tree_unflatten(treedef, outs),
+                jax.tree_util.tree_unflatten(treedef, ress))
+    raise ValueError(method)
+
+
+def compression_ratio(method: str) -> float:
+    return {"none": 1.0, "bf16": 2.0, "int8": 4.0}[method]

@@ -1,0 +1,75 @@
+"""Batched serving engine: continuous batched decode with prefill, KV/SSM
+caches, temperature sampling, and PerfTracker serve-mode anchors
+(request.dequeue / decode.step play the roles of the two anchors)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.events import Kind
+from repro.instrument.hooks import PerfTracker, PerfTrackerConfig
+from repro.models.transformer import Transformer
+from repro.train.step import make_serve_step
+
+
+@dataclass
+class ServeConfig:
+    batch: int = 4
+    max_len: int = 128
+    temperature: float = 0.0        # 0 = greedy
+    seed: int = 0
+    perftracker: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
+                 dist=None):
+        self.cfg, self.sc = cfg, sc
+        self.model = Transformer(cfg, dist=dist)
+        self.params = params
+        self._step = jax.jit(make_serve_step(self.model),
+                             donate_argnums=(1,))
+        self.pt: Optional[PerfTracker] = None
+        if sc.perftracker:
+            self.pt = PerfTracker(PerfTrackerConfig(window_s=0.5))
+
+    def generate(self, prompts: np.ndarray, n_new: int) -> np.ndarray:
+        """prompts: (B, P) int32. Returns (B, P+n_new)."""
+        sc = self.sc
+        B, P = prompts.shape
+        cache = self.model.init_cache(B, sc.max_len)
+        rng = jax.random.PRNGKey(sc.seed)
+        toks = [prompts[:, i] for i in range(P)]
+        tracer = self.pt.tracer if self.pt else None
+
+        logits = None
+        # prefill token-by-token (tiny configs; production path would use
+        # the chunked prefill_step — see launch/dryrun.py prefill cells)
+        for t in range(P + n_new - 1):
+            if t < P:
+                cur = jnp.asarray(toks[t])[:, None]
+            else:
+                cur = nxt[:, None]  # noqa: F821
+            batch = {"tokens": cur}
+            if tracer:
+                with tracer.phase("decode.step", Kind.GPU, depth=1):
+                    logits, cache = self._step(self.params, cache, batch,
+                                               jnp.int32(t))
+            else:
+                logits, cache = self._step(self.params, cache, batch,
+                                           jnp.int32(t))
+            lg = logits[:, 0, :self.cfg.vocab_size]
+            if sc.temperature > 0:
+                rng, k = jax.random.split(rng)
+                nxt = jax.random.categorical(k, lg / sc.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lg, axis=-1)
+            if t >= P - 1:
+                toks.append(np.asarray(nxt))
+        return np.stack(toks, axis=1)

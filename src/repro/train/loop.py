@@ -1,0 +1,137 @@
+"""Production training loop: jit'd train step with sharded state, PerfTracker
+attached (import-only anchors), async checkpointing, elastic restart, and
+mitigation hooks (localizer output -> checkpoint-now + re-mesh).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.ckpt.checkpoint import Checkpointer
+from repro.core.events import Kind
+from repro.core.mitigation import Action, plan_mitigations
+from repro.data.pipeline import DataConfig, DataLoader, SyntheticLM
+from repro.dist.sharding import DistCtx
+from repro.instrument.hooks import PerfTracker, PerfTrackerConfig
+from repro.models.transformer import Transformer
+from repro.optim.adamw import AdamW, OptConfig
+from repro.train.step import make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 50
+    log_every: int = 10
+    ckpt_every: int = 0              # 0 = off
+    ckpt_dir: str = ""
+    remat: str = "none"
+    folded: bool = False
+    perftracker: bool = True
+    pt_window_s: float = 1.0
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data: DataConfig,
+                 opt_cfg: OptConfig, tc: TrainConfig,
+                 dist: Optional[DistCtx] = None):
+        self.cfg, self.data_cfg, self.tc = cfg, data, tc
+        self.dist = dist
+        self.model = Transformer(cfg, dist=dist, remat=tc.remat,
+                                 folded=tc.folded)
+        self.opt = AdamW(opt_cfg)
+        self.source = SyntheticLM(cfg, data)
+        self.loader = DataLoader(self.source)
+        step_fn = make_train_step(self.model, self.opt)
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.pt: Optional[PerfTracker] = None
+        if tc.perftracker:
+            self.pt = PerfTracker(PerfTrackerConfig(
+                window_s=tc.pt_window_s,
+                family="moe" if cfg.is_moe else "dense"))
+            self._next, self._opt_anchor = self.pt.wrap(
+                self.loader.next, lambda: None)
+        else:
+            self._next, self._opt_anchor = self.loader.next, lambda: None
+        self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
+        self.history: list = []
+        self.mitigations: list = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, resume: bool = True):
+        params = self.model.init(jax.random.PRNGKey(self.tc.seed))
+        opt_state = self.opt.init(params)
+        start = 0
+        if self.ckpt and resume:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                shardings = None
+                if self.dist is not None and self.dist.mesh is not None:
+                    ps = self.dist.params_shardings(params)
+                    shardings = {"params": ps,
+                                 "opt": self.opt.state_shardings(ps, None)}
+                (params, opt_state), meta = self._restore(latest, params,
+                                                          opt_state)
+                start = meta["step"]
+        return params, opt_state, start
+
+    def _restore(self, step, params, opt_state):
+        tree, meta = self.ckpt.restore(step, {"params": params,
+                                              "opt": opt_state})
+        return (tree["params"], tree["opt"]), meta
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None):
+        params, opt_state, start = self.init_state()
+        n = steps or self.tc.steps
+        tracer = self.pt.tracer if self.pt else None
+        for step in range(start, start + n):
+            batch_np = self._next()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if tracer:
+                with tracer.phase("train.step", Kind.GPU, depth=1,
+                                  fence=lambda: metrics["loss"]):
+                    params, opt_state, metrics = self._jit_step(
+                        params, opt_state, batch)
+            else:
+                params, opt_state, metrics = self._jit_step(
+                    params, opt_state, batch)
+            self._opt_anchor()
+            if (step + 1) % self.tc.log_every == 0 or step == start:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.history.append({"step": step + 1, **m})
+                print(f"step {step+1:5d} loss {m['loss']:.4f} "
+                      f"nll {m['nll']:.4f} gnorm {m['grad_norm']:.3f} "
+                      f"lr {m['lr']:.2e}", flush=True)
+            if self.ckpt and self.tc.ckpt_every \
+                    and (step + 1) % self.tc.ckpt_every == 0:
+                self.ckpt.save(step + 1, {"params": params,
+                                          "opt": opt_state})
+            self._maybe_mitigate(params, opt_state, step + 1)
+        if self.ckpt:
+            self.ckpt.save(start + n, {"params": params, "opt": opt_state},
+                           async_=False)
+        self.loader.close()
+        return params, opt_state
+
+    # ------------------------------------------------------------------
+    def _maybe_mitigate(self, params, opt_state, step: int):
+        """PerfTracker output drives fault tolerance (DESIGN.md §4)."""
+        if not self.pt or not self.pt.results:
+            return
+        res = self.pt.results.pop()
+        plans = plan_mitigations(res.diagnoses, fleet_size=1)
+        for p in plans:
+            if p.action == Action.NONE:
+                continue
+            self.mitigations.append((step, p))
+            print(f"[perftracker] step {step}: {res.trigger.reason if res.trigger else '?'} -> "
+                  f"{p.action.value}: {p.detail}", flush=True)
+            if p.action == Action.REPLACE_HOSTS and self.ckpt:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})

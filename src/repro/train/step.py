@@ -1,0 +1,63 @@
+"""Train / prefill / serve step builders (the programs the dry-run lowers and
+the train loop executes)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Transformer
+from repro.optim.adamw import AdamW
+
+
+def make_train_step(model: Transformer, opt: AdamW, accum_steps: int = 1):
+    """accum_steps > 1: gradient accumulation over micro-batches via
+    lax.scan — per-device activation memory scales with the micro-batch
+    (HBM-fit lever for the big archs; EXPERIMENTS §Perf H5). The global
+    batch is split on the leading axis; grads are averaged."""
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape((accum_steps,
+                                         x.shape[0] // accum_steps)
+                                        + x.shape[1:]), b)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, (losses, ms) = jax.lax.scan(body, zeros, micro(batch))
+            grads = jax.tree_util.tree_map(
+                lambda g: g / accum_steps, gsum)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        new_params, new_state, opt_metrics = opt.update(
+            grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: Transformer):
+    def prefill_step(params, batch):
+        hidden, _, cache = model.forward(params, batch, collect_cache=True)
+        last_logits = model.logits(params, hidden[:, -1:, :])
+        return last_logits, cache
+    return prefill_step
+
+
+def make_serve_step(model: Transformer):
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+    return serve_step

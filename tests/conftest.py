@@ -1,0 +1,10 @@
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py (and subprocess dist
+# tests) use 512/8 placeholder devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,91 @@
+"""End-to-end reproduction of the paper's production cases (§3, §6) through
+detector -> profiling -> patterns -> localization -> mitigation."""
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core.mitigation import Action, plan_mitigations
+from repro.core.service import PerfTrackerService
+from repro.core.simulation import (ALLGATHER, DATALOADER_STACK,
+                                   FORWARD_STACK, GC_STACK, GEMM,
+                                   FleetSimulator, SimConfig)
+
+
+def run_case(faults, n_workers=32, family="dense", seed=7):
+    cfg = SimConfig(n_workers=n_workers, window_s=2.0, rate_hz=2000,
+                    seed=seed)
+    sim = FleetSimulator(cfg, faults)
+    svc = PerfTrackerService(family=family)
+    trig = svc.feed_anchors(sim.anchor_events(80, degrade_after=40))
+    assert trig is not None, "degradation not detected"
+    res = svc.diagnose_profiles(sim.profile_window(), trigger=trig)
+    return res
+
+
+def test_c1p1_gpu_throttle():
+    res = run_case([F.GpuThrottle(workers=range(4))])
+    d = next(d for d in res.diagnoses if d.abnormality.function == GEMM)
+    assert set(d.abnormality.workers.tolist()) == set(range(4))
+    assert "throttling" in d.hint
+    plans = plan_mitigations(res.diagnoses, 32)
+    assert plans[0].action == Action.REPLACE_HOSTS
+    assert plans[0].workers == [0, 1, 2, 3]
+
+
+def test_c1p2_nvlink_down():
+    res = run_case([F.NvlinkDown(workers=[5], group_size=16)])
+    d = next(d for d in res.diagnoses
+             if d.abnormality.function == ALLGATHER)
+    assert 5 in d.abnormality.workers.tolist()
+    assert "NVLink" in d.hint or "PCIe" in d.hint
+
+
+def test_ring_slow_link():
+    res = run_case([F.RingSlowLink(slow_worker=9, rho=0.4)])
+    fns = res.functions()
+    assert ALLGATHER in fns
+
+
+def test_c2p1_slow_dataloader():
+    res = run_case([F.SlowDataloader()])
+    d = next(d for d in res.diagnoses
+             if "socket" in d.abnormality.function)
+    # common problem: flagged on (nearly) all workers via expectation
+    assert len(d.abnormality.workers) >= 30
+    assert "storage" in d.hint or "data loading" in d.hint
+    plans = plan_mitigations(res.diagnoses, 32)
+    assert any(p.action == Action.MIGRATE_DATALOADER for p in plans)
+
+
+def test_c2p2_cpu_bound_forward():
+    res = run_case([F.CpuBoundForward(workers=range(6))])
+    d = next(d for d in res.diagnoses
+             if "forward" in d.abnormality.function)
+    assert set(d.abnormality.workers.tolist()) >= set(range(6))
+
+
+def test_c2p3_async_gc():
+    res = run_case([F.AsyncGc(probability=0.5)])
+    d = next(d for d in res.diagnoses
+             if "gradmode" in d.abnormality.function)
+    assert "garbage" in d.hint
+    plans = plan_mitigations(res.diagnoses, 32)
+    assert any(p.action == Action.SYNCHRONIZE_GC for p in plans)
+
+
+def test_healthy_fleet_no_flags():
+    cfg = SimConfig(n_workers=32, window_s=2.0, rate_hz=2000, seed=3)
+    sim = FleetSimulator(cfg, [])
+    svc = PerfTrackerService()
+    assert svc.feed_anchors(sim.anchor_events(80)) is None
+    res = svc.diagnose_profiles(sim.profile_window())
+    assert res.functions() == []
+
+
+def test_pattern_compression_ratio():
+    """Fig. 11: patterns are orders of magnitude smaller than raw data."""
+    cfg = SimConfig(n_workers=4, window_s=2.0, rate_hz=2000, seed=0)
+    sim = FleetSimulator(cfg, [])
+    svc = PerfTrackerService()
+    res = svc.diagnose_profiles(sim.profile_window())
+    assert res.raw_bytes / max(1, res.pattern_bytes) > 100

@@ -1,0 +1,68 @@
+"""Prefill/forward vs token-by-token decode equivalence for every family."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, reduced
+from repro.models.io import synth_batch
+from repro.models.transformer import Transformer
+
+CASES = ["granite-34b", "gemma2-2b", "deepseek-v2-lite-16b", "mamba2-2.7b",
+         "zamba2-7b", "musicgen-medium", "internvl2-1b",
+         "llama4-maverick-400b-a17b", "starcoder2-3b", "phi3-medium-14b"]
+
+
+@pytest.mark.parametrize("name", CASES)
+def test_decode_matches_forward(name):
+    B, S = 2, 16
+    cfg = reduced(ARCHS[name])
+    if cfg.sliding_window:
+        cfg = cfg.with_overrides(sliding_window=0)
+    if cfg.is_moe:
+        # no-drop capacity so train/decode dispatch identically
+        cfg = cfg.with_overrides(capacity_factor=float(cfg.num_experts))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = synth_batch(cfg, "train", B, S, seed=3)
+    hidden, _, _ = model.forward(params, batch)
+    full_logits = model.logits(params, hidden)
+
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    errs = []
+    F = batch["embeds"].shape[1] if cfg.frontend == "vision" else 0
+    for t in range(S):
+        if cfg.frontend == "audio":
+            sb = {"embeds": batch["embeds"][:, t:t + 1]}
+        elif cfg.frontend == "vision" and t < F:
+            sb = {"embeds": batch["embeds"][:, t:t + 1], "tokens": None}
+        elif cfg.frontend == "vision":
+            sb = {"tokens": batch["tokens"][:, t - F:t - F + 1]}
+        else:
+            sb = {"tokens": batch["tokens"][:, t:t + 1]}
+        logits, cache = step(params, cache, sb, jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(logits[:, 0] - full_logits[:, t]))))
+    assert max(errs) < 2e-3, (name, max(errs))
+
+
+def test_sliding_window_ring_cache():
+    """Ring-buffer window cache must equal a full cache once positions
+    exceed the window (zamba2/starcoder2 long-context serving)."""
+    cfg = reduced(ARCHS["starcoder2-3b"]).with_overrides(sliding_window=8)
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 24
+    batch = synth_batch(cfg, "train", B, S, seed=5)
+    # reference: full-length cache (kv_len returns window when S>window,
+    # so build an oversized cache via max_len=window exactly -> ring).
+    ring_cache = model.init_cache(B, S)       # window-sized => ring
+    assert ring_cache["kv"]["k"].shape[-3] == 8
+    hidden, _, _ = model.forward(params, batch)
+    full_logits = model.logits(params, hidden)
+    step = jax.jit(model.decode_step)
+    errs = []
+    for t in range(S):
+        sb = {"tokens": batch["tokens"][:, t:t + 1]}
+        logits, ring_cache = step(params, ring_cache, sb, jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(logits[:, 0] - full_logits[:, t]))))
+    assert max(errs) < 2e-3, errs

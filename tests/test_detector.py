@@ -1,0 +1,78 @@
+"""§4.1 iteration/degradation detection."""
+import pytest
+
+from repro.core.detector import DetectorConfig, IterationDetector
+
+D, O = "dataloader.next", "optimizer.step"
+
+
+def feed_iters(det, pattern, n, t0=0.0, dur=1.0):
+    t = t0
+    trig = None
+    for _ in range(n):
+        for j, name in enumerate(pattern):
+            trig = det.feed(name, t + dur * (j + 1) / (len(pattern) + 1)) \
+                or trig
+        t += dur
+    return trig, t
+
+
+def test_sequence_lock_simple():
+    det = IterationDetector()
+    feed_iters(det, [D, O], 10)
+    assert det.locked
+    assert det.sequence == (D, O)
+
+
+def test_sequence_lock_pipelined():
+    # pipeline parallelism: several loads then several steps per iteration
+    det = IterationDetector()
+    feed_iters(det, [D, D, O, O], 10)
+    assert det.locked
+    assert det.sequence == (D, D, O, O)
+
+
+def test_no_lock_on_inconsistent_sequences():
+    det = IterationDetector()
+    for i in range(9):
+        pat = [D, O] if i % 2 else [D, D, O]
+        feed_iters(det, pat, 1, t0=float(i))
+    assert not det.locked
+
+
+def test_slowdown_trigger():
+    det = IterationDetector(DetectorConfig(n_recent=20))
+    _, t = feed_iters(det, [D, O], 30, dur=1.0)
+    assert det.locked and not det.triggers
+    trig, _ = feed_iters(det, [D, O], 25, t0=t, dur=1.2)  # +20% > 5%
+    assert trig is not None and trig.reason == "slowdown"
+
+
+def test_no_trigger_within_5pct():
+    det = IterationDetector(DetectorConfig(n_recent=20))
+    _, t = feed_iters(det, [D, O], 30, dur=1.0)
+    trig, _ = feed_iters(det, [D, O], 30, t0=t, dur=1.02)  # +2% < 5%
+    assert trig is None
+
+
+def test_blockage():
+    det = IterationDetector()
+    _, t = feed_iters(det, [D, O], 15, dur=1.0)
+    assert det.check_blockage(t + 1.0) is None
+    trig = det.check_blockage(t + 10.0)   # >= 5x avg
+    assert trig is not None and trig.reason == "blockage"
+
+
+def test_resync_after_k_mismatches():
+    cfg = DetectorConfig(k_resync=50)
+    det = IterationDetector(cfg)
+    feed_iters(det, [D, O], 12)
+    assert det.locked
+    # user code changes shape: stream of only optimizer.step events
+    t = 100.0
+    for i in range(cfg.k_resync + 1):
+        det.feed(O, t + i * 0.1)
+    assert not det.locked   # back to detection phase
+    # and it can re-lock on the new sequence
+    feed_iters(det, [D, O, O], 12, t0=200.0)
+    assert det.locked and det.sequence == (D, O, O)

@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps +
+hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# -- flash attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 4, 4, 64), (2, 256, 6, 2, 64), (1, 256, 8, 1, 128),
+    (2, 128, 2, 2, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_shapes_dtypes(B, S, H, KV, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    exp = ref.attention_oracle(q, k, v)
+    tol = 0.035 if dtype == jnp.bfloat16 else 2e-5
+    assert out.shape == exp.shape and out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - exp.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("kw", [dict(window=100), dict(softcap=20.0),
+                                dict(causal=False),
+                                dict(window=64, softcap=10.0)])
+def test_flash_variants(kw):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 32))
+    k = jax.random.normal(ks[1], (2, 256, 2, 32))
+    v = jax.random.normal(ks[2], (2, 256, 2, 32))
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64, **kw)
+    exp = ref.attention_oracle(q, k, v, **kw)
+    assert float(jnp.max(jnp.abs(out - exp))) < 2e-5
+
+
+# -- SSD scan -------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 8, 16), (2, 128, 4, 32, 2, 16, 32),
+    (1, 128, 4, 64, 4, 32, 64), (1, 32, 2, 16, 2, 16, 32),
+])
+def test_ssd_shapes(B, S, H, P, G, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    exp = ref.ssd_oracle(x, dt, A, Bm, Cm)
+    scale = float(jnp.max(jnp.abs(exp))) + 1e-6
+    assert float(jnp.max(jnp.abs(out - exp))) / scale < 2e-5
+
+
+def test_ssd_matches_model_chunked_path():
+    """Pallas kernel == the model's XLA chunked implementation."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, P, G, N = 2, 128, 4, 32, 2, 16
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y1 = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32)
+    y2, _ = ssd_chunked(x, dt, A, Bm, Cm, 32)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 2e-4
+
+
+# -- pattern summary -------------------------------------------------------------
+
+def test_pattern_summary_basic(rng):
+    E, n = 16, 256
+    u = np.clip(rng.normal(0.5, 0.3, (E, n)), 0, 1)
+    u[:, :40] = 0
+    u[3, 100:180] = 0
+    u[5] = 0
+    out = np.asarray(ops.pattern_summary(jnp.asarray(u, jnp.float32)))
+    exp = ref.pattern_summary_oracle(u)
+    np.testing.assert_allclose(out, exp, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 3), st.data())
+def test_pattern_summary_property(e_rows, zero_blocks, data):
+    n = 128
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    u = np.clip(rng.normal(0.4, 0.3, (e_rows, n)), 0, 1)
+    for _ in range(zero_blocks):
+        i = rng.integers(0, e_rows)
+        a = rng.integers(0, n - 2)
+        b = rng.integers(a + 1, n)
+        u[i, a:b] = 0
+    out = np.asarray(ops.pattern_summary(jnp.asarray(u, jnp.float32)))
+    exp = ref.pattern_summary_oracle(u)
+    np.testing.assert_allclose(out, exp, atol=2e-5)
+    # mu/sigma/frac bounded
+    assert (out[:, 0] >= -1e-6).all() and (out[:, 0] <= 1 + 1e-6).all()
+    assert (out[:, 2] > 0).all() and (out[:, 2] <= 1 + 1e-6).all()

@@ -1,0 +1,106 @@
+"""§4.3: distances + MAD rule + the §3 ring classification."""
+import numpy as np
+import pytest
+
+from repro.core.events import Kind
+from repro.core.expectations import PYTHON_BOX, distance_from_expectation
+from repro.core.localizer import Localizer
+from repro.core.patterns import summarize_worker
+from repro.core.events import FunctionEvent, SampleStream, WorkerProfile
+from repro.core.ring import RingConfig, ring_utilization
+
+
+def test_distance_from_expectation_box():
+    assert distance_from_expectation(np.array([0.005, 0.5, 0.5]),
+                                     PYTHON_BOX) == 0.0
+    assert distance_from_expectation(np.array([0.11, 0.5, 0.5]),
+                                     PYTHON_BOX) == pytest.approx(0.10)
+
+
+def _mk(pats):
+    return {"f": np.asarray(pats, np.float32)}, {"f": Kind.GPU}
+
+
+def test_differential_outlier_flagged():
+    W = 64
+    pats = np.tile(np.array([0.5, 0.9, 0.05], np.float32), (W, 1))
+    pats[7] = [0.9, 0.3, 0.05]     # slow worker: high beta, low util
+    loc = Localizer()
+    abn = loc.localize(*_mk(pats))
+    assert len(abn) == 1
+    assert abn[0].workers.tolist() == [7]
+    assert "differential" in abn[0].reason
+
+
+def test_homogeneous_fleet_clean():
+    W = 64
+    rng = np.random.default_rng(0)
+    pats = np.tile(np.array([0.5, 0.9, 0.05], np.float32), (W, 1))
+    pats += rng.normal(0, 0.005, pats.shape).astype(np.float32)
+    loc = Localizer()
+    assert loc.localize(*_mk(pats)) == []
+
+
+def test_beta_gate():
+    W = 32
+    pats = np.tile(np.array([0.005, 0.9, 0.05], np.float32), (W, 1))
+    pats[3] = [0.009, 0.1, 0.5]    # weird but negligible function
+    loc = Localizer()
+    assert loc.localize(*_mk(pats)) == []
+
+
+def test_expectation_flagged_on_all_workers():
+    W = 32
+    pats = np.tile(np.array([0.2, 0.4, 0.05], np.float32), (W, 1))
+    patterns = {"dataloader": pats}
+    kinds = {"dataloader": Kind.PYTHON}
+    abn = Localizer().localize(patterns, kinds)
+    assert len(abn) == 1 and len(abn[0].workers) == W
+    assert "expectation" in abn[0].reason
+
+
+# -- §3 ring example: the three (mu, sigma) signatures -----------------------
+
+def ring_patterns(slow_worker=None, rho=0.5):
+    cfg = RingConfig(n_workers=8, n_rings=1, stage_s=0.02, noise=0.01)
+    traces = ring_utilization(cfg, 2.0, 2000.0, slow_worker=slow_worker,
+                              rho=rho, rng=np.random.default_rng(1))
+    pats = []
+    for w in range(cfg.n_workers):
+        # comm occupies 25% of the window: inside the COMM expected box, so
+        # only the DIFFERENTIAL path can flag workers
+        prof = WorkerProfile(
+            worker=w, window=(0.0, 2.0),
+            events=[FunctionEvent("AllReduce_RING", Kind.COMM, 0.0, 0.5, w)],
+            streams={"pcie_tx": SampleStream(2000.0, 0.0, traces[w])})
+        pats.append(summarize_worker(prof)["AllReduce_RING"].as_array())
+    return np.stack(pats)
+
+
+def test_ring_healthy_full_throughput():
+    pats = ring_patterns(None)
+    assert (pats[:, 1] > 0.9).all()          # mu ~ max (Fig. 5a)
+
+
+def test_ring_slow_link_signatures():
+    rho = 0.5
+    pats = ring_patterns(slow_worker=3, rho=rho)
+    mu, sigma = pats[:, 1], pats[:, 2]
+    # every worker's mean drops to ~rho (Fig. 5b/5c)
+    assert (np.abs(mu - rho) < 0.15).all()
+    # the slow-link worker is STABLE; everyone else fluctuates (Fig. 5)
+    assert sigma[3] < 0.1
+    others = np.delete(sigma, 3)
+    assert (others > 3 * sigma[3]).all()
+
+
+def test_ring_localizer_picks_slow_worker():
+    pats = ring_patterns(slow_worker=3)
+    patterns = {"AllReduce_RING": pats.astype(np.float32)}
+    kinds = {"AllReduce_RING": Kind.COMM}
+    abn = Localizer().localize(patterns, kinds)
+    assert len(abn) == 1
+    assert 3 in abn[0].workers.tolist()
+    # paper §4.3: uniqueness, not raw distance — the stable slow worker is
+    # the unique one even though fluctuating workers are "far" in L1 too
+    assert len(abn[0].workers) <= 2

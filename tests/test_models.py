@@ -1,0 +1,84 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step
+on CPU, output shapes + no NaNs; analytic param counts match eval_shape."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import shapes_for
+from repro.configs.registry import ARCHS, reduced
+from repro.models.io import synth_batch
+from repro.models.transformer import Transformer
+
+ALL = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_forward_and_grad(name):
+    cfg = reduced(ARCHS[name])
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = synth_batch(cfg, "train", 2, 64)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss), name
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(jnp.all(jnp.isfinite(g)) for g in leaves), name
+    # logits shape
+    hidden, _, _ = model.forward(params, batch)
+    logits = model.logits(params, hidden)
+    B = batch["labels"].shape[0]
+    S = batch["labels"].shape[1]
+    assert logits.shape == (B, S, cfg.padded_vocab)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_param_counts_match_eval_shape(name):
+    cfg = reduced(ARCHS[name])
+    model = Transformer(cfg)
+    spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    actual = sum(int(jnp.prod(jnp.asarray(l.shape)))
+                 for l in jax.tree_util.tree_leaves(spec))
+    analytic = cfg.param_counts()
+    # analytic count covers matmul/embed params; norms/convs/etc. add a
+    # small overhead — require agreement within 8%
+    assert abs(actual - analytic["total"]) / actual < 0.08, \
+        (name, actual, analytic["total"])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_full_config_is_assigned_spec(name):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = ARCHS[name]
+    spec = {
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }[name]
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == spec
+
+
+def test_llama4_param_budget():
+    c = ARCHS["llama4-maverick-400b-a17b"].param_counts()
+    assert 3.5e11 < c["total"] < 4.6e11      # ~400B
+    assert 1.2e10 < c["active"] < 2.2e10     # ~17B
+
+
+def test_moe_active_vs_total():
+    c = ARCHS["deepseek-v2-lite-16b"].param_counts()
+    assert 1.2e10 < c["total"] < 2.0e10      # ~16B
+    assert c["active"] < 0.25 * c["total"]   # ~2.4B active
+
+
+def test_shapes_for_long_context():
+    names_with_500k = [n for n in ALL
+                       if any(s.name == "long_500k"
+                              for s in shapes_for(ARCHS[n]))]
+    assert sorted(names_with_500k) == ["mamba2-2.7b", "zamba2-7b"]

@@ -1,0 +1,135 @@
+"""§4.2: Algorithm 1 (critical execution duration), critical path, patterns."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.critical_path import critical_intervals, \
+    critical_time_by_function
+from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
+from repro.core.patterns import MASS_FRACTION, critical_duration, \
+    summarize_worker
+
+
+# -- Algorithm 1 --------------------------------------------------------------
+
+def region_ok(u, lo, hi, g):
+    """No zero-run longer than g inside [lo, hi)."""
+    run = 0
+    for x in u[lo:hi]:
+        run = run + 1 if x <= 0 else 0
+        if run > g:
+            return False
+    return True
+
+
+def test_contiguous_signal():
+    u = np.zeros(100)
+    u[20:60] = 1.0
+    lo, hi = critical_duration(u)
+    assert (lo, hi) == (20, 60)
+
+
+def test_gap_included_when_needed():
+    u = np.zeros(100)
+    u[10:30] = 1.0
+    u[40:60] = 1.0   # both bursts needed for 80% mass
+    lo, hi = critical_duration(u)
+    assert lo == 10 and hi == 60
+
+
+def test_small_tail_excluded():
+    u = np.zeros(200)
+    u[10:110] = 1.0
+    u[190:192] = 0.5  # 1% of mass, far away
+    lo, hi = critical_duration(u)
+    assert (lo, hi) == (10, 110)
+
+
+def test_all_zero():
+    assert critical_duration(np.zeros(10)) == (0, 10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0, 1, width=32), min_size=1, max_size=120),
+       st.data())
+def test_algorithm1_properties(vals, data):
+    u = np.asarray(vals, np.float64)
+    # sprinkle exact zeros
+    if len(u) > 3:
+        k = data.draw(st.integers(0, len(u) // 2))
+        idx = data.draw(st.lists(st.integers(0, len(u) - 1), min_size=k,
+                                 max_size=k, unique=True))
+        u[idx] = 0.0
+    lo, hi = critical_duration(u)
+    total = u.sum()
+    assert 0 <= lo <= hi <= len(u)
+    if total > 0:
+        seg = u[lo:hi]
+        # (1) mass property
+        assert seg.sum() >= MASS_FRACTION * total - 1e-9
+        # (2) trimmed: boundaries are nonzero samples
+        assert seg[0] > 0 and seg[-1] > 0
+        # (3) minimal g: the interval's max interior zero-run g* is such
+        # that no region at g*-1 reaches the mass target
+        run = best = 0
+        for x in seg:
+            run = run + 1 if x <= 0 else 0
+            best = max(best, run)
+        if best > 0:
+            lo2, hi2 = critical_duration(u)  # determinism
+            assert (lo2, hi2) == (lo, hi)
+
+
+# -- critical path -------------------------------------------------------------
+
+def ev(name, kind, s, e, depth=0, thread="train"):
+    return FunctionEvent(name, kind, s, e, 0, thread, depth)
+
+
+def test_priority_shadows_lower():
+    events = [ev("gpu", Kind.GPU, 1.0, 3.0),
+              ev("comm", Kind.COMM, 0.0, 4.0),
+              ev("py", Kind.PYTHON, 0.0, 5.0, depth=1)]
+    ct = critical_time_by_function(events, (0.0, 5.0))
+    assert ct["gpu"] == pytest.approx(2.0)
+    assert ct["comm"] == pytest.approx(2.0)      # 0-1 and 3-4
+    assert ct["py"] == pytest.approx(1.0)        # 4-5 only
+
+
+def test_python_leaf_wins():
+    events = [ev("parent", Kind.PYTHON, 0.0, 4.0, depth=1),
+              ev("child", Kind.PYTHON, 1.0, 3.0, depth=2)]
+    ct = critical_time_by_function(events, (0.0, 4.0))
+    assert ct["child"] == pytest.approx(2.0)
+    assert ct["parent"] == pytest.approx(2.0)
+
+
+def test_non_train_thread_excluded():
+    events = [ev("bg", Kind.PYTHON, 0.0, 4.0, thread="_bootstrap"),
+              ev("fg", Kind.PYTHON, 1.0, 2.0)]
+    ct = critical_time_by_function(events, (0.0, 4.0))
+    assert "bg" not in ct
+    assert ct["fg"] == pytest.approx(1.0)
+
+
+def test_beta_bounded():
+    events = [ev("a", Kind.GPU, 0.0, 10.0), ev("b", Kind.GPU, 0.0, 10.0)]
+    ct = critical_time_by_function(events, (0.0, 2.0))
+    assert sum(ct.values()) <= 2.0 * 2 + 1e-9
+
+
+# -- worker summarization ---------------------------------------------------------
+
+def test_summarize_worker_beta_mu():
+    rate = 1000.0
+    n = 2000
+    gpu = np.zeros(n)
+    gpu[0:1000] = 0.9
+    prof = WorkerProfile(
+        worker=0, window=(0.0, 2.0),
+        events=[ev("k1", Kind.GPU, 0.0, 1.0)],
+        streams={"gpu_sm": SampleStream(rate, 0.0, gpu)})
+    pats = summarize_worker(prof)
+    assert pats["k1"].beta == pytest.approx(0.5, abs=0.01)
+    assert pats["k1"].mu == pytest.approx(0.9, abs=0.02)
+    assert pats["k1"].sigma < 0.05
