@@ -1,0 +1,16 @@
+PY ?= python
+
+.PHONY: test deps bench bench-summarize
+
+deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+# tier-1 verify (ROADMAP.md)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+bench-summarize:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only summarize_backends

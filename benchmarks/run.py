@@ -13,6 +13,7 @@ MODULES = [
     ("ability_matrix", "Table 4: ability matrix vs baselines"),
     ("overhead", "Table 3 / Fig. 17a-b: profiling overhead"),
     ("localization_scaling", "Fig. 17c: localization scaling"),
+    ("summarize_backends", "ISSUE 1: summarize backend shootout"),
     ("kernels_bench", "kernel micro-bench"),
     ("roofline_table", "EXPERIMENTS §Roofline (from dry-run artifacts)"),
 ]

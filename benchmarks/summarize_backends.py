@@ -1,0 +1,57 @@
+"""Summarize-backend shootout over (E, n) grids (ISSUE 1 acceptance: the
+numpy backend must be >= 5x the python oracle at E >= 256).
+
+Rows: ``summarize[<backend>]_E<E>_n<n>, us_per_call, speedup-vs-python``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+GRID = [(64, 256), (256, 256), (256, 512), (1024, 256)]
+BACKENDS = ["python", "numpy", "pallas"]
+
+
+def _matrix(E: int, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = np.clip(rng.normal(0.45, 0.3, (E, n)), 0, 1).astype(np.float32)
+    for _ in range(E // 4):
+        i = int(rng.integers(0, E))
+        a = int(rng.integers(0, n))
+        u[i, a:min(n, a + int(rng.integers(1, n // 3 + 2)))] = 0
+    u[:: max(1, E // 16)] = 0.0          # some all-zero rows
+    return u
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                  # warmup (jit/trace)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    from repro.summarize import get_backend
+    rows = []
+    for E, n in GRID:
+        u = _matrix(E, n)
+        base_us = None
+        for name in BACKENDS:
+            be = get_backend(name)
+            if be.name != name:           # unavailable, fell back
+                continue
+            reps = 1 if name == "python" else (3 if name == "pallas" else 20)
+            us = _time(lambda: be.batch_stats(u), reps)
+            if name == "python":
+                base_us = us
+            speedup = f"{base_us / us:.1f}x_vs_python" if base_us else ""
+            rows.append((f"summarize[{name}]_E{E}_n{n}", us, speedup))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -22,6 +22,8 @@ def critical_intervals(events: List[FunctionEvent],
                        ) -> Dict[int, List[Tuple[float, float]]]:
     """Returns, per event index, the sub-intervals on the critical path."""
     t0, t1 = window
+    if not events:   # empty window: np.array([]) is float64 and the bool
+        return {}    # masks below would die on ~float
     # boundaries
     pts = {t0, t1}
     for e in events:

@@ -1,10 +1,14 @@
 """Per-worker PerfTracker daemon (paper §4, Fig. 6): receives the raw
 profiling window from its worker, summarizes runtime behavior patterns in a
 separate process/core (here: same process, separate function — the training
-thread is never blocked), and uploads only the ~KB pattern dict."""
+thread is never blocked), and uploads only the ~KB pattern dict.
+
+Summarization runs through the pluggable batched backend in
+``repro.summarize`` (DESIGN.md §3); pick one per call, or fleet-wide via the
+``REPRO_SUMMARIZE_BACKEND`` env var.
+"""
 from __future__ import annotations
 
-import struct
 import time
 from dataclasses import dataclass
 from typing import Dict, Tuple
@@ -13,7 +17,6 @@ import msgpack
 import numpy as np
 
 from repro.core.events import Kind, WorkerProfile
-from repro.core.patterns import Pattern, summarize_worker
 
 
 @dataclass
@@ -31,12 +34,15 @@ class PatternUpload:
 
 
 def summarize_and_upload(profile: WorkerProfile,
-                         kind_of: Dict[str, Kind] = None) -> PatternUpload:
+                         kind_of: Dict[str, Kind] = None,
+                         backend=None) -> PatternUpload:
+    """Summarize one worker and build its upload. ``kind_of`` overrides flow
+    through the single kind-resolution path in ``repro.summarize.packing``
+    (stream routing AND the uploaded kind byte come from the same map)."""
+    # late import: repro.core <-> repro.summarize would otherwise cycle
+    from repro.summarize.engine import summarize_profile
     t0 = time.perf_counter()
-    pats = summarize_worker(profile)
-    kinds: Dict[str, Kind] = dict(kind_of or {})
-    for e in profile.events:   # function kind comes from its events
-        kinds.setdefault(e.name, e.kind)
+    pats, kinds = summarize_profile(profile, kind_of=kind_of, backend=backend)
     payload = msgpack.packb({
         name: (p.beta, p.mu, p.sigma, int(kinds.get(name, Kind.PYTHON)))
         for name, p in pats.items()})

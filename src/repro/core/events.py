@@ -73,6 +73,10 @@ class WorkerProfile:
     window: Tuple[float, float]
     events: List[FunctionEvent] = field(default_factory=list)
     streams: Dict[str, SampleStream] = field(default_factory=dict)
+    #: optional pre-built (E, n) batch for the summarize backends
+    #: (repro.summarize.packing.PackedEvents); tracers that know their
+    #: events fill this so the daemon skips the packing pass
+    packed: Optional[object] = None
 
     def raw_size_bytes(self) -> int:
         ev = sum(64 + len(e.name) for e in self.events)

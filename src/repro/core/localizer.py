@@ -13,6 +13,7 @@ on one CPU core (benchmarks/localization_scaling.py reproduces Fig. 17c).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -47,16 +48,25 @@ class Localizer:
         self.n_peers = n_peers
         self.delta_threshold = delta_threshold
         self.k_mad = k_mad
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)   # kept for API compat
 
-    def delta_distance(self, pats: np.ndarray) -> np.ndarray:
+    def _fn_rng(self, function: str) -> np.random.Generator:
+        """Peer sampling is seeded per function (base seed + name hash) so
+        Delta_{f,w} never depends on dict iteration order or on how many
+        functions were localized before this one."""
+        return np.random.default_rng(
+            (self.seed, zlib.crc32(function.encode("utf-8"))))
+
+    def delta_distance(self, pats: np.ndarray, function: str = ""
+                       ) -> np.ndarray:
         """Delta_{f,w} for one function. pats: (W, 3)."""
         W = pats.shape[0]
         mx = pats.max(axis=0)
         mx[mx <= 0] = 1.0
         norm = pats / mx                               # Eq. 8
         n = min(self.n_peers, W)
-        peers = self.rng.choice(W, size=n, replace=False)
+        peers = self._fn_rng(function).choice(W, size=n, replace=False)
         # (W, n) Manhattan distances
         d = np.abs(norm[:, None, :] - norm[peers][None, :, :]).sum(axis=2)
         return (d >= self.delta_threshold).mean(axis=1)  # Eq. 9-10
@@ -75,7 +85,7 @@ class Localizer:
             hi = np.array([b[1] for b in box])
             d_exp = (np.maximum(lo - pats, 0)
                      + np.maximum(pats - hi, 0)).sum(axis=1)
-            delta = self.delta_distance(pats)
+            delta = self.delta_distance(pats, function=name)
             med = np.median(delta)
             mad = np.median(np.abs(delta - med))
             thr = med + self.k_mad * mad

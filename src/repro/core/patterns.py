@@ -9,20 +9,19 @@ mu:   duration-weighted mean resource utilization over the *critical
       search over the gap bound g).
 sigma: same weighting for the utilization std-dev (Eq. 5).
 
-The pure-python/numpy implementation here is the oracle; the TPU Pallas
-kernel (repro.kernels.pattern_summary) computes the same quantities for
-batches of events.
+``critical_duration`` here is the scalar oracle for Algorithm 1; the batched
+execution lives in ``repro.summarize`` behind a pluggable backend protocol
+(python oracle loop / vectorized numpy / TPU Pallas kernel — DESIGN.md §3).
+``summarize_worker`` delegates there and keeps its historical signature.
 """
 from __future__ import annotations
 
-from collections import defaultdict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.critical_path import critical_time_by_function
-from repro.core.events import FunctionEvent, Kind, WorkerProfile
+from repro.core.events import Kind, WorkerProfile
 
 MASS_FRACTION = 0.8
 
@@ -104,41 +103,17 @@ class Pattern:
 
 
 def summarize_worker(profile: WorkerProfile,
-                     kinds: Optional[Dict[str, Kind]] = None
-                     ) -> Dict[str, Pattern]:
-    """Per-function behavior patterns for one worker (paper §4.2)."""
-    t0, t1 = profile.window
-    T = t1 - t0
-    beta = critical_time_by_function(profile.events, profile.window)
+                     kinds: Optional[Dict[str, Kind]] = None,
+                     backend=None) -> Dict[str, Pattern]:
+    """Per-function behavior patterns for one worker (paper §4.2).
 
-    # group executions by function identity
-    groups: Dict[str, List[FunctionEvent]] = defaultdict(list)
-    for e in profile.events:
-        groups[e.name].append(e)
-
-    out: Dict[str, Pattern] = {}
-    for name, evs in groups.items():
-        num_mu = num_sig = den = 0.0
-        for e in evs:
-            stream = profile.streams.get(e.resource_stream())
-            if stream is None:
-                continue
-            u = stream.window(e.start, e.end)
-            if len(u) == 0:
-                continue
-            lo, hi = critical_duration(u)
-            seg = u[lo:hi]
-            if len(seg) == 0:
-                continue
-            w = len(seg) / stream.rate_hz      # |L(e)|
-            num_mu += w * float(seg.mean())
-            num_sig += w * float(seg.std())
-            den += w
-        mu = num_mu / den if den else 0.0
-        sigma = num_sig / den if den else 0.0
-        out[name] = Pattern(beta=min(1.0, beta.get(name, 0.0) / T),
-                            mu=min(1.0, mu), sigma=min(1.0, sigma))
-    return out
+    ``kinds`` overrides the per-event function kinds (stream routing +
+    uploaded kind map); ``backend`` picks the batched Algorithm-1 executor
+    (name, instance, or None for env/auto — see repro.summarize).
+    """
+    from repro.summarize.engine import summarize_profile
+    pats, _ = summarize_profile(profile, kind_of=kinds, backend=backend)
+    return pats
 
 
 def pattern_size_bytes(patterns: Dict[str, Pattern]) -> int:

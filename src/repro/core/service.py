@@ -17,6 +17,7 @@ from repro.core.daemon import PatternUpload, summarize_and_upload
 from repro.core.events import Kind, WorkerProfile
 from repro.core.localizer import Abnormality, Localizer
 from repro.core.report import Diagnosis, build_report, format_report
+from repro.summarize.aggregate import PatternAggregator
 
 
 @dataclass
@@ -39,10 +40,13 @@ class PerfTrackerService:
     """Global side of PerfTracker. ``family`` tunes expected-range boxes."""
 
     def __init__(self, family: str = "dense",
-                 detector_cfg: DetectorConfig = DetectorConfig()):
+                 detector_cfg: DetectorConfig = DetectorConfig(),
+                 summarize_backend=None):
         self.family = family
         self.detector = IterationDetector(detector_cfg)
         self.localizer = Localizer(family=family)
+        # name/instance/None — threaded into every per-worker summarization
+        self.summarize_backend = summarize_backend
 
     # -- detection ---------------------------------------------------------
     def feed_anchors(self, events: Sequence[Tuple[str, float]]
@@ -56,19 +60,12 @@ class PerfTrackerService:
     # -- diagnosis ---------------------------------------------------------
     def aggregate(self, uploads: Sequence[PatternUpload]
                   ) -> Tuple[Dict[str, np.ndarray], Dict[str, Kind]]:
-        """Stack per-worker patterns into (W, 3) arrays per function.
+        """Fold per-worker uploads into {function -> (W, 3)} views of one
+        columnar buffer (streaming — each upload's dict is transient).
         Functions missing on a worker get that worker's zeros (never on its
         critical path)."""
-        per_worker = [u.unpack() for u in uploads]
-        names = sorted({n for pats, _ in per_worker for n in pats})
-        kinds: Dict[str, Kind] = {}
-        W = len(uploads)
-        agg = {n: np.zeros((W, 3), np.float32) for n in names}
-        for w, (pats, ks) in enumerate(per_worker):
-            for n, p in pats.items():
-                agg[n][w] = p
-                kinds.setdefault(n, ks[n])
-        return agg, kinds
+        agg = PatternAggregator(expected_workers=len(uploads))
+        return agg.extend(uploads).finalize()
 
     def diagnose_profiles(self, profiles: Sequence[WorkerProfile],
                           kind_of: Dict[str, Kind] = None,
@@ -76,7 +73,9 @@ class PerfTrackerService:
                           ) -> DiagnosisResult:
         timing = {}
         t0 = time.perf_counter()
-        uploads = [summarize_and_upload(p, kind_of) for p in profiles]
+        uploads = [summarize_and_upload(p, kind_of,
+                                        backend=self.summarize_backend)
+                   for p in profiles]
         timing["summarize_s"] = time.perf_counter() - t0
         t1 = time.perf_counter()
         agg, kinds = self.aggregate(uploads)

@@ -1,0 +1,1 @@
+from repro.dist.sharding import DistCtx  # noqa: F401

@@ -1,0 +1,27 @@
+"""jax version compatibility for SPMD APIs.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to top-level
+``jax.shard_map`` (and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``) across jax releases; the container pins an
+older jax, so call sites go through this shim.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    # the module move and the check_rep -> check_vma rename happened in
+    # different releases: probe the actual signature, not the location
+    params = inspect.signature(sm).parameters
+    kw = ("check_vma" if "check_vma" in params
+          else "check_rep" if "check_rep" in params else None)
+    kwargs = {kw: check_vma} if kw else {}
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **kwargs)

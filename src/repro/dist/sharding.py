@@ -1,0 +1,157 @@
+"""Sharding context for production meshes (DESIGN.md §4).
+
+``DistCtx`` is the one object the model/optimizer/serving layers consult for
+placement decisions, derived from the mesh's axis names:
+
+  - ``model`` (a.k.a. tensor-parallel) axis: expert/TP sharding;
+  - every other axis ("pod", "data", ...): data-parallel, and — with
+    ``fsdp`` on (the default) — parameter sharding a la ZeRO-3: each leaf is
+    sharded over the DP axes along its largest divisible dimension and
+    gathered on use by XLA's SPMD partitioner.
+
+Numerics never depend on these choices (SPMD resharding is exact); they only
+set where bytes live, so the rules below stay deliberately simple and total:
+anything indivisible is replicated rather than rejected.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: axis names treated as the tensor/model-parallel axis
+MODEL_AXIS_NAMES = ("model", "tp")
+
+
+@dataclass
+class DistCtx:
+    mesh: Optional[Mesh] = None
+    fsdp: bool = True             # ZeRO-3 params over the DP axes
+    zero1_moe: bool = False       # experts resident (no per-layer gathers)
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "DistCtx":
+        return cls(mesh=mesh)
+
+    # -- axis bookkeeping --------------------------------------------------
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        for a in self.axis_names:
+            if a in MODEL_AXIS_NAMES:
+                return a
+        return None
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names
+                     if a not in MODEL_AXIS_NAMES)
+
+    def _size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        s = 1
+        for a in axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def dp_size(self) -> int:
+        return self._size(self.dp_axes)
+
+    @property
+    def tp_size(self) -> int:
+        return self._size((self.tp_axis,)) if self.tp_axis else 1
+
+    # -- sharding rules ----------------------------------------------------
+    def _named(self, spec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def _dp_entry(self):
+        dp = self.dp_axes
+        return dp if len(dp) > 1 else dp[0]
+
+    def _shard_leaf_fsdp(self, leaf) -> NamedSharding:
+        shape = tuple(getattr(leaf, "shape", ()))
+        dpn = self.dp_size
+        if not self.fsdp or dpn <= 1 or not shape:
+            return self._named(P())
+        divisible = [i for i, s in enumerate(shape) if s and s % dpn == 0]
+        if not divisible:
+            return self._named(P())
+        ax = max(divisible, key=lambda i: shape[i])
+        spec = [None] * len(shape)
+        spec[ax] = self._dp_entry()
+        return self._named(P(*spec))
+
+    def params_shardings(self, params):
+        """ZeRO-3 layout: every leaf sharded over DP along its largest
+        divisible dim (replicated when fsdp is off or nothing divides)."""
+        return jax.tree_util.tree_map(self._shard_leaf_fsdp, params)
+
+    def _shard_batch_leaf(self, leaf) -> NamedSharding:
+        shape = tuple(getattr(leaf, "shape", ()))
+        dpn = self.dp_size
+        if dpn > 1 and shape and shape[0] % dpn == 0:
+            spec = [self._dp_entry()] + [None] * (len(shape) - 1)
+            return self._named(P(*spec))
+        return self._named(P())
+
+    def batch_shardings(self, batch):
+        """Inputs: leading (global-batch) dim over the DP axes."""
+        return jax.tree_util.tree_map(self._shard_batch_leaf, batch)
+
+    def cache_shardings(self, cache, batch_size: int):
+        """KV caches: the batch dim (whichever axis equals ``batch_size``)
+        over DP; everything else replicated."""
+        dpn = self.dp_size
+
+        def shard(leaf):
+            shape = tuple(getattr(leaf, "shape", ()))
+            spec = [None] * len(shape)
+            if dpn > 1:
+                for i, s in enumerate(shape):
+                    if s == batch_size and s % dpn == 0:
+                        spec[i] = self._dp_entry()
+                        break
+            return self._named(P(*spec))
+        return jax.tree_util.tree_map(shard, cache)
+
+    # -- activation constraints -------------------------------------------
+    def _constrain(self, x, last_axis_tp: bool):
+        if self.mesh is None or not getattr(x, "ndim", 0):
+            return x
+        spec = [None] * x.ndim
+        if self.dp_size > 1 and x.shape[0] % self.dp_size == 0:
+            spec[0] = self._dp_entry()
+        tp = self.tp_axis
+        if (last_axis_tp and tp and self.tp_size > 1
+                and x.shape[-1] % self.tp_size == 0):
+            spec[-1] = tp
+        return jax.lax.with_sharding_constraint(x, self._named(P(*spec)))
+
+    def constrain_act(self, x):
+        """Activations: batch over DP, feature dim replicated."""
+        return self._constrain(x, last_axis_tp=False)
+
+    def constrain_logits(self, x):
+        """Logits: batch over DP, vocab over the model axis."""
+        return self._constrain(x, last_axis_tp=True)
+
+    def constrain_heads(self, x):
+        """Attention tensors (B, S, H, D): batch over DP, heads over the
+        model axis (the head counts are padded upstream to divide tp)."""
+        if self.mesh is None or getattr(x, "ndim", 0) < 4:
+            return x
+        spec = [None] * x.ndim
+        if self.dp_size > 1 and x.shape[0] % self.dp_size == 0:
+            spec[0] = self._dp_entry()
+        tp = self.tp_axis
+        if tp and self.tp_size > 1 and x.shape[2] % self.tp_size == 0:
+            spec[2] = tp
+        return jax.lax.with_sharding_constraint(x, self._named(P(*spec)))

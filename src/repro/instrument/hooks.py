@@ -24,6 +24,8 @@ class PerfTrackerConfig:
     detector: DetectorConfig = field(default_factory=DetectorConfig)
     family: str = "dense"
     auto_profile: bool = True
+    #: summarize backend name for this worker's daemon (None = env/auto)
+    summarize_backend: Optional[str] = None
 
 
 class PerfTracker:
@@ -33,8 +35,9 @@ class PerfTracker:
     def __init__(self, cfg: PerfTrackerConfig = PerfTrackerConfig(),
                  worker: int = 0):
         self.cfg = cfg
-        self.service = PerfTrackerService(family=cfg.family,
-                                          detector_cfg=cfg.detector)
+        self.service = PerfTrackerService(
+            family=cfg.family, detector_cfg=cfg.detector,
+            summarize_backend=cfg.summarize_backend)
         self.tracer = Tracer(worker)
         self._window_deadline: Optional[float] = None
         self.last_trigger: Optional[Trigger] = None

@@ -72,10 +72,20 @@ class HostSampler:
 
 
 class Tracer:
-    """Records phase events; active only during a profiling window."""
+    """Records phase events; active only during a profiling window.
 
-    def __init__(self, worker: int = 0):
+    The tracer is the producer side of the batched summarize pipeline:
+    ``stop_window`` pre-packs the recorded events into the ``(E, n)`` matrix
+    the summarize backends consume (DESIGN.md §3), so the daemon's
+    summarization starts from packed rows instead of re-slicing streams
+    event by event.  Which backend consumes the pack is the service/daemon's
+    choice (``PerfTrackerService(summarize_backend=...)`` or the
+    ``REPRO_SUMMARIZE_BACKEND`` env var).
+    """
+
+    def __init__(self, worker: int = 0, pack: bool = True):
         self.worker = worker
+        self.pack = pack
         self.events: List[FunctionEvent] = []
         self.active = False
         self._window_start = 0.0
@@ -97,10 +107,14 @@ class Tracer:
                           self.worker, e.thread, e.depth, e.resource)
             for e in self.events]
         stream = SampleStream(stream.rate_hz, 0.0, stream.values)
-        return WorkerProfile(
+        profile = WorkerProfile(
             worker=self.worker, window=(0.0, end - t0), events=events,
             streams={"cpu": stream, "gpu_sm": stream, "pcie_tx": stream,
                      "membw": stream})
+        if self.pack:
+            from repro.summarize.packing import pack_profile
+            profile.packed = pack_profile(profile)
+        return profile
 
     @contextmanager
     def phase(self, name: str, kind: Kind = Kind.PYTHON, depth: int = 1,

@@ -144,7 +144,8 @@ def apply_moe(p, x: Array, cfg, dist=None) -> Tuple[Array, Array]:
             stats = jax.lax.psum(stats, (tp,) + tuple(dp)) / ep
             return y.reshape(xl.shape), stats
 
-        routed, stats = jax.shard_map(
+        from repro.dist.compat import shard_map
+        routed, stats = shard_map(
             body, mesh=mesh,
             in_specs=(pspec, P(dp, None, None)),
             out_specs=(P(dp, None, None), P()),

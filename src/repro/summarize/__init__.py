@@ -1,0 +1,20 @@
+"""Backend-pluggable batched summarization (DESIGN.md §3-4).
+
+One pipeline from tracer to fleet-scale localization:
+
+    tracer (pre-packed events) -> pack_profile -> SummarizeBackend
+        -> summarize_profile -> daemon upload -> PatternAggregator
+        -> Localizer
+
+Backends: ``python`` (oracle loop), ``numpy`` (vectorized feasibility
+passes), ``pallas`` (TPU kernel).  Select per call, per service, or via the
+``REPRO_SUMMARIZE_BACKEND`` env var.
+"""
+from repro.summarize.base import (ENV_BACKEND, SummarizeBackend,  # noqa: F401
+                                  available_backends, get_backend,
+                                  register_backend)
+from repro.summarize import backends as _backends  # noqa: F401 (registers)
+from repro.summarize.packing import (PackedEvents, pack_profile,  # noqa: F401
+                                     resolve_kinds)
+from repro.summarize.engine import summarize_profile  # noqa: F401
+from repro.summarize.aggregate import PatternAggregator  # noqa: F401

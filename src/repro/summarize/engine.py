@@ -1,0 +1,85 @@
+"""Batched per-worker summarization (DESIGN.md §3): pack -> backend -> reduce.
+
+Replaces the per-event loop of the old ``core.patterns.summarize_worker``:
+every execution of every function becomes one row of a single ``(E, n)``
+matrix, the selected backend computes all critical-duration statistics in one
+batched call, and the duration-weighted per-function reduction (Eq. 4-5) is a
+pair of ``bincount`` scatters.  Beta (Eq. 2-3) still comes from the critical
+path sweep, which is already event-parallel-free and cheap.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.critical_path import critical_time_by_function
+from repro.core.events import Kind, WorkerProfile
+from repro.summarize.base import SummarizeBackend, get_backend
+from repro.summarize.packing import pack_profile, resolve_kinds
+
+BackendLike = Union[str, SummarizeBackend, None]
+
+
+def _resolve_backend(backend: BackendLike) -> SummarizeBackend:
+    if backend is None or isinstance(backend, str):
+        return get_backend(backend)
+    return backend
+
+
+def summarize_profile(profile: WorkerProfile,
+                      kind_of: Optional[Dict[str, Kind]] = None,
+                      backend: BackendLike = None,
+                      ) -> Tuple[Dict[str, "Pattern"], Dict[str, Kind]]:
+    """Per-function behavior patterns + resolved kinds for one worker.
+
+    This is the one summarization entry point: kinds resolve once
+    (``kind_of`` overrides beat event kinds) and steer both stream selection
+    and the returned kind map the daemon uploads.
+    """
+    from repro.core.patterns import Pattern   # late: patterns delegates here
+
+    be = _resolve_backend(backend)
+    kinds = resolve_kinds(profile, kind_of)
+    t0, t1 = profile.window
+    T = t1 - t0
+    beta = critical_time_by_function(profile.events, profile.window)
+
+    # every function named by an event gets a pattern, even if all its
+    # executions were dropped at pack time (missing stream / empty window)
+    names = []
+    index: Dict[str, int] = {}
+    for e in profile.events:
+        if e.name not in index:
+            index[e.name] = len(names)
+            names.append(e.name)
+    F = len(names)
+    num_mu = np.zeros((F,))
+    num_sig = np.zeros((F,))
+    den = np.zeros((F,))
+
+    packed = pack_profile(profile, kind_of)
+    if packed.n_events and packed.u.shape[1]:
+        stats = np.asarray(be.batch_stats(packed.u), np.float64)
+        mean, std, cnt = stats[:, 0], stats[:, 1], stats[:, 2]
+        lengths = packed.lengths.astype(np.float64)
+        # padding-independent conventions: all-zero rows weigh their true
+        # (unpadded) window; no row can outweigh its own window
+        empty = packed.u.sum(axis=1) <= 0.0
+        cnt = np.where(empty, lengths, np.minimum(cnt, lengths))
+        mean = np.where(empty, 0.0, mean)
+        std = np.where(empty, 0.0, std)
+        w = cnt / packed.rates                             # |L(e)| seconds
+        gid = np.asarray([index[nm] for nm in packed.names],
+                         np.int64)[packed.fn_ids]
+        num_mu = np.bincount(gid, weights=w * mean, minlength=F)
+        num_sig = np.bincount(gid, weights=w * std, minlength=F)
+        den = np.bincount(gid, weights=w, minlength=F)
+
+    out: Dict[str, Pattern] = {}
+    for j, nm in enumerate(names):
+        mu = num_mu[j] / den[j] if den[j] else 0.0
+        sigma = num_sig[j] / den[j] if den[j] else 0.0
+        out[nm] = Pattern(beta=min(1.0, beta.get(nm, 0.0) / T),
+                          mu=min(1.0, mu), sigma=min(1.0, sigma))
+    return out, kinds

@@ -1,0 +1,36 @@
+"""Graceful hypothesis guard (ISSUE 1 satellite): property tests use
+
+    from _prop import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is installed (pip install -r requirements-dev.txt) these are
+the real decorators; when it isn't, ``@given`` turns the test into a clean
+pytest skip instead of killing collection for the whole module — the
+non-property tests in the same file still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover - optional dev dep
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def wrapper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """st.<anything>(...) placeholder; never drawn from."""
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -3,7 +3,8 @@ unblocked oracle, folded and unfolded."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _prop import given, settings, st   # hypothesis or graceful skip
 
 from repro.models.attention import AttnSpec, attention_ref, blocked_attention
 

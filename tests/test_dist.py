@@ -143,6 +143,7 @@ def test_grad_compression_psum():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.dist.compat import shard_map
         from repro.optim.compress import psum_compressed
 
         mesh = jax.make_mesh((8,), ("pod",))
@@ -155,8 +156,8 @@ def test_grad_compression_psum():
             exact, _ = psum_compressed({"g": gl[0]}, "pod", "none")
             return out_bf16["g"], out_int8["g"], exact["g"]
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
-                                  out_specs=P()))
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("pod"),
+                              out_specs=P()))
         b16, i8, exact = f(g)
         e1 = float(jnp.max(jnp.abs(b16 - exact)))
         e2 = float(jnp.max(jnp.abs(i8 - exact)))

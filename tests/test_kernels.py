@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _prop import given, settings, st   # hypothesis or graceful skip
 
 from repro.kernels import ops, ref
 

@@ -1,7 +1,8 @@
 """§4.2: Algorithm 1 (critical execution duration), critical path, patterns."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _prop import given, settings, st   # hypothesis or graceful skip
 
 from repro.core.critical_path import critical_intervals, \
     critical_time_by_function
