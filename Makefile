@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: test deps bench bench-summarize
+.PHONY: test deps bench bench-summarize bench-fleet
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -14,3 +14,6 @@ bench:
 
 bench-summarize:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only summarize_backends
+
+bench-fleet:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only fleet_diagnosis

@@ -1,0 +1,86 @@
+"""ISSUE 2: fleet-batched diagnosis vs the per-worker loop.
+
+End-to-end ``PerfTrackerService.diagnose_profiles`` wall-time over the same
+raw profiling windows in both modes:
+
+  * ``wire``  — the per-worker daemon loop: W ``summarize_and_upload``
+    calls, each packing/summarizing/serializing one worker;
+  * ``fleet`` — one packed summarization pass across all W workers
+    (``repro.summarize.fleet``), msgpack skipped.
+
+Acceptance (ISSUE 2): fleet >= 5x wire at W=512 on the numpy backend, with
+identical diagnoses.  Rows::
+
+    fleet_diagnosis[<mode>]_W<W>, us_per_call, <speedup;parity>
+
+``REPRO_BENCH_FLEET_SIZES`` (comma-separated) overrides the fleet sizes —
+CI smoke runs W=8 only.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+
+SIZES = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_FLEET_SIZES", "8,32,128,512").split(",") if x)
+
+#: profiling-window shape: 1 s window sampled at 500 Hz — scaled down from
+#: the paper's 20 s x 10 kHz the same way the rest of the sim suite is
+WINDOW_S = 1.0
+RATE_HZ = 500.0
+
+
+def _profiles(W: int, seed: int = 7):
+    from repro.core import faults as F
+    from repro.core.simulation import FleetSimulator, SimConfig
+    sim = FleetSimulator(
+        SimConfig(n_workers=W, window_s=WINDOW_S, rate_hz=RATE_HZ,
+                  seed=seed),
+        [F.GpuThrottle(workers=range(max(1, W // 64)))])
+    return sim.profile_window()
+
+
+def _same_diagnoses(a, b) -> bool:
+    if len(a.diagnoses) != len(b.diagnoses):
+        return False
+    for da, db in zip(a.diagnoses, b.diagnoses):
+        aa, bb = da.abnormality, db.abnormality
+        if aa.function != bb.function or da.hint != db.hint \
+                or aa.workers.tolist() != bb.workers.tolist() \
+                or not np.array_equal(aa.patterns, bb.patterns):
+            return False
+    return True
+
+
+def run():
+    from repro.core.service import PerfTrackerService
+    rows = []
+    for W in SIZES:
+        profiles = _profiles(W)
+        svc = PerfTrackerService(summarize_backend="numpy")
+        best = {}
+        result = {}
+        for mode in ("wire", "fleet"):
+            svc.diagnose_profiles(profiles, mode=mode)      # warmup
+            reps = 3 if W >= 128 else 5
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                result[mode] = svc.diagnose_profiles(profiles, mode=mode)
+                ts.append(time.perf_counter() - t0)
+            best[mode] = min(ts)
+        parity = _same_diagnoses(result["wire"], result["fleet"])
+        speedup = best["wire"] / best["fleet"]
+        rows.append((f"fleet_diagnosis[wire]_W{W}", best["wire"] * 1e6, ""))
+        rows.append((f"fleet_diagnosis[fleet]_W{W}", best["fleet"] * 1e6,
+                     f"{speedup:.1f}x_vs_wire;"
+                     f"identical={'Y' if parity else 'N'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core import faults as F
 from repro.core.service import PerfTrackerService
-from repro.core.simulation import FleetSimulator, SimConfig
+from repro.core.simulation import GEMM, FleetSimulator, SimConfig
 
 
 def run(sizes=(1_000, 10_000, 100_000, 1_000_000), n_functions=20):
@@ -24,7 +24,7 @@ def run(sizes=(1_000, 10_000, 100_000, 1_000_000), n_functions=20):
         t0 = time.perf_counter()
         res = svc.diagnose_patterns(patterns, kinds)
         dt = time.perf_counter() - t0
-        found = any("gpu" in f for f in res.functions())
+        found = any(f == GEMM for f in res.functions())
         rows.append((f"localization_scaling/w={w}", dt * 1e6,
                      f"localize_s={dt:.3f};found={found}"))
     return rows

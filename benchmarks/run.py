@@ -14,6 +14,7 @@ MODULES = [
     ("overhead", "Table 3 / Fig. 17a-b: profiling overhead"),
     ("localization_scaling", "Fig. 17c: localization scaling"),
     ("summarize_backends", "ISSUE 1: summarize backend shootout"),
+    ("fleet_diagnosis", "ISSUE 2: fleet-batched vs per-worker diagnosis"),
     ("kernels_bench", "kernel micro-bench"),
     ("roofline_table", "EXPERIMENTS §Roofline (from dry-run artifacts)"),
 ]

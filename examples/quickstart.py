@@ -37,6 +37,10 @@ def main():
     res = trainer.pt.flush()
     if res is None and trainer.pt.results:
         res = trainer.pt.results[-1]
+    if res is None:
+        # re-armed detector fires once per incident; the window it opened
+        # may already have been consumed by mitigation — show that one
+        res = trainer.last_diagnosis
     print()
     if trainer.pt.service.detector.triggers:
         t = trainer.pt.service.detector.triggers[0]

@@ -40,6 +40,10 @@ class DetectorConfig:
     blockage_factor: float = 5.0
     k_resync: int = 200       # K
     history_iters: int = 512  # window for the 'recent shortest' baseline
+    #: slowdown re-arm: after a trigger, no new slowdown trigger until the
+    #: recent mean recovers below threshold, or this many further matched
+    #: iterations elapse while still degraded (0 = fire once per recovery)
+    rearm_cooldown: int = 50
 
 
 class IterationDetector:
@@ -57,6 +61,11 @@ class IterationDetector:
         self.durations: Deque[float] = deque(
             maxlen=cfg.history_iters)
         self.triggers: List[Trigger] = []
+        # re-arm state: a degradation fires ONE trigger, then stays silent
+        # until the metric recovers (or, for slowdown, a cooldown elapses)
+        self._slowdown_armed = True
+        self._iters_since_trigger = 0
+        self._blockage_armed = True
 
     # -- phase 1: iteration detection -----------------------------------
     def _candidate_iterations(self) -> List[Tuple[Tuple[str, ...], float,
@@ -108,18 +117,31 @@ class IterationDetector:
         recent = list(self.durations)[-cfg.n_recent:]
         mean = sum(recent) / len(recent)
         baseline = min(self.durations)
-        if mean > baseline * cfg.slowdown_ratio:
-            trig = Trigger("slowdown", t1, mean, baseline,
-                           f"mean {mean:.3f}s > {cfg.slowdown_ratio:.2f}x "
-                           f"min {baseline:.3f}s over last {cfg.n_recent}")
-            self.triggers.append(trig)
-            return trig
-        return None
+        if mean <= baseline * cfg.slowdown_ratio:
+            # recovered: the next degradation is a new incident
+            self._slowdown_armed = True
+            self._iters_since_trigger = 0
+            return None
+        if not self._slowdown_armed:
+            # still degraded since the last trigger: stay silent until the
+            # cooldown elapses (then remind once and restart the clock)
+            self._iters_since_trigger += 1
+            if cfg.rearm_cooldown <= 0 \
+                    or self._iters_since_trigger < cfg.rearm_cooldown:
+                return None
+        trig = Trigger("slowdown", t1, mean, baseline,
+                       f"mean {mean:.3f}s > {cfg.slowdown_ratio:.2f}x "
+                       f"min {baseline:.3f}s over last {cfg.n_recent}")
+        self.triggers.append(trig)
+        self._slowdown_armed = False
+        self._iters_since_trigger = 0
+        return trig
 
     # -- public API ------------------------------------------------------
     def feed(self, name: str, t: float) -> Optional[Trigger]:
         """Feed one anchor event; returns a Trigger if degradation fired."""
         self._last_event_t = t
+        self._blockage_armed = True        # events flowing again: stall over
         self._events.append((name, t))
         if self.phase == "detect":
             self._try_lock_sequence()
@@ -150,9 +172,12 @@ class IterationDetector:
         return None
 
     def check_blockage(self, now: float) -> Optional[Trigger]:
-        """Type-(2) detection: mid-sequence stall >= 5x avg iteration."""
+        """Type-(2) detection: mid-sequence stall >= 5x avg iteration.
+
+        Fires once per stall: after a blockage trigger, repeated polls stay
+        silent until an anchor event arrives (``feed`` re-arms)."""
         if self.phase != "monitor" or not self.durations \
-                or self._last_event_t is None:
+                or self._last_event_t is None or not self._blockage_armed:
             return None
         avg = sum(self.durations) / len(self.durations)
         if now - self._last_event_t >= self.cfg.blockage_factor * avg:
@@ -161,6 +186,7 @@ class IterationDetector:
                            f"no events for {now - self._last_event_t:.3f}s "
                            f">= {self.cfg.blockage_factor}x avg {avg:.3f}s")
             self.triggers.append(trig)
+            self._blockage_armed = False
             return trig
         return None
 

@@ -3,7 +3,7 @@
 Paper values: Python functions R = [0, 0.01] x [0,1] x [0,1] (an LMT should
 not be bottlenecked >1% by any Python function); collective communication
 R = [0, 0.3] x [0,1] x [0,1]; GPU compute kernels are never 'unexpected'
-(R = full box). Per-family adjustments (DESIGN.md §5): MoE archs allow a
+(R = full box). Per-family adjustments (DESIGN.md §6): MoE archs allow a
 wider collective box for all_to_all/dispatch phases.
 """
 from __future__ import annotations

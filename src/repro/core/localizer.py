@@ -60,7 +60,12 @@ class Localizer:
 
     def delta_distance(self, pats: np.ndarray, function: str = ""
                        ) -> np.ndarray:
-        """Delta_{f,w} for one function. pats: (W, 3)."""
+        """Delta_{f,w} for one function. pats: (W, 3).
+
+        Workers drawn into their own peer sample are masked out of the
+        (W, n) distance matrix: a self-pair contributes a guaranteed-zero
+        distance, deflating Delta_{f,w} by up to 1/n — Eq. 9-10 count
+        disagreement with *other* workers."""
         W = pats.shape[0]
         mx = pats.max(axis=0)
         mx[mx <= 0] = 1.0
@@ -69,7 +74,9 @@ class Localizer:
         peers = self._fn_rng(function).choice(W, size=n, replace=False)
         # (W, n) Manhattan distances
         d = np.abs(norm[:, None, :] - norm[peers][None, :, :]).sum(axis=2)
-        return (d >= self.delta_threshold).mean(axis=1)  # Eq. 9-10
+        not_self = peers[None, :] != np.arange(W)[:, None]
+        hits = ((d >= self.delta_threshold) & not_self).sum(axis=1)
+        return hits / np.maximum(not_self.sum(axis=1), 1)  # Eq. 9-10
 
     def localize(self, patterns: Dict[str, np.ndarray],
                  kinds: Dict[str, Kind]) -> List[Abnormality]:

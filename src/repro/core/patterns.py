@@ -38,7 +38,9 @@ def critical_duration(u: np.ndarray, mass: float = MASS_FRACTION
     n = len(u)
     if n == 0:
         return (0, 0)
-    total = float(u.sum())
+    # f64 accumulation: exact for f32 inputs, so the mass target (and hence
+    # the selected region) is independent of trailing zero-padding width
+    total = float(u.sum(dtype=np.float64))
     if total <= 0.0:
         return (0, n)
     target = mass * total

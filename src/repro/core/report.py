@@ -29,8 +29,7 @@ def _fmt_workers(ws: np.ndarray, limit: int = 8) -> str:
 def root_cause_hint(a: Abnormality, fleet_size: int) -> str:
     """Paper's diagnosis playbook, encoded."""
     frac = len(a.workers) / max(1, fleet_size)
-    beta = float(np.median(a.abn_beta)) if hasattr(a, "abn_beta") else \
-        float(np.median(a.patterns[:, 0]))
+    beta = float(np.median(a.patterns[:, 0]))
     mu = float(np.median(a.patterns[:, 1]))
     sigma = float(np.median(a.patterns[:, 2]))
     t_beta, t_mu, t_sigma = (float(x) for x in a.typical)

@@ -1,8 +1,21 @@
 """PerfTracker service: the end-to-end pipeline of Fig. 6.
 
   anchor events -> IterationDetector -> trigger -> 20s profiling window on
-  every worker -> per-worker pattern summarization (daemon) -> centralized
-  localization (single core) -> Fig.-7 report (+ mitigation hooks).
+  every worker -> pattern summarization -> centralized localization (single
+  core) -> Fig.-7 report (+ mitigation hooks).
+
+Summarization runs in one of two modes (DESIGN.md §5):
+
+  * ``fleet`` (default) — the in-process fast path: all W workers'
+    executions are packed into one ragged batch per stream rate, the
+    selected backend's ``batch_stats`` runs once per group for the entire
+    fleet, and patterns scatter-reduce straight into the aggregator's
+    columnar ``(W, F, 3)`` buffer.  msgpack never runs.
+  * ``wire`` — the distributed-daemon shape: one ``summarize_and_upload``
+    per worker, each producing the ~KB msgpack payload that would cross the
+    network, folded in by the streaming ``PatternAggregator``.
+
+Both modes produce byte-identical diagnoses (a tested invariant).
 """
 from __future__ import annotations
 
@@ -18,6 +31,7 @@ from repro.core.events import Kind, WorkerProfile
 from repro.core.localizer import Abnormality, Localizer
 from repro.core.report import Diagnosis, build_report, format_report
 from repro.summarize.aggregate import PatternAggregator
+from repro.summarize.fleet import summarize_fleet
 
 
 @dataclass
@@ -69,16 +83,35 @@ class PerfTrackerService:
 
     def diagnose_profiles(self, profiles: Sequence[WorkerProfile],
                           kind_of: Dict[str, Kind] = None,
-                          trigger: Optional[Trigger] = None
-                          ) -> DiagnosisResult:
+                          trigger: Optional[Trigger] = None,
+                          mode: str = "fleet") -> DiagnosisResult:
+        """Diagnose one fleet of raw profiling windows.
+
+        ``mode="fleet"`` (default) batches the whole fleet through one
+        summarization pass in-process; ``mode="wire"`` exercises the
+        per-worker daemon/upload shape used in distributed deployments.
+        Diagnoses are byte-identical between the two.
+        """
         timing = {}
         t0 = time.perf_counter()
-        uploads = [summarize_and_upload(p, kind_of,
-                                        backend=self.summarize_backend)
-                   for p in profiles]
-        timing["summarize_s"] = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        agg, kinds = self.aggregate(uploads)
+        if mode == "fleet":
+            fs = summarize_fleet(profiles, kind_of,
+                                 backend=self.summarize_backend)
+            timing["summarize_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            agg, kinds = fs.agg.finalize()
+            pattern_bytes = fs.pattern_bytes
+        elif mode == "wire":
+            uploads = [summarize_and_upload(p, kind_of,
+                                            backend=self.summarize_backend)
+                       for p in profiles]
+            timing["summarize_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            agg, kinds = self.aggregate(uploads)
+            pattern_bytes = sum(len(u.payload) for u in uploads)
+        else:
+            raise ValueError(f"unknown diagnosis mode {mode!r}; "
+                             "expected 'fleet' or 'wire'")
         abn = self.localizer.localize(agg, kinds)
         timing["localize_s"] = time.perf_counter() - t1
         return DiagnosisResult(
@@ -86,8 +119,8 @@ class PerfTrackerService:
             diagnoses=build_report(abn, len(profiles)),
             fleet_size=len(profiles),
             timing=timing,
-            pattern_bytes=sum(len(u.payload) for u in uploads),
-            raw_bytes=sum(u.raw_bytes for u in uploads))
+            pattern_bytes=pattern_bytes,
+            raw_bytes=sum(p.raw_size_bytes() for p in profiles))
 
     def diagnose_patterns(self, patterns: Dict[str, np.ndarray],
                           kinds: Dict[str, Kind]) -> DiagnosisResult:

@@ -216,30 +216,80 @@ class FleetSimulator:
     # -- pattern mode (scaling benchmarks) ---------------------------------
     def synth_patterns(self, n_functions: int = 20
                        ) -> Tuple[Dict[str, np.ndarray], Dict[str, Kind]]:
-        """Direct (W, 3) pattern synthesis for very large fleets."""
+        """Direct (W, 3) pattern synthesis for very large fleets.
+
+        Uses the same canonical function names as raw mode and injects
+        every fault model's §3/§6 pattern signature, so the scaling
+        benchmarks and the scenario-matrix tests can exercise localization
+        on all six production cases without materializing raw windows."""
         W = self.cfg.n_workers
         rng = self.rng
         patterns: Dict[str, np.ndarray] = {}
         kinds: Dict[str, Kind] = {}
-        for i in range(n_functions):
+
+        def add(name, kind, beta0, mu0, sig0):
+            # BOUNDED (uniform) jitter: worst-case pairwise Manhattan after
+            # Eq. 8 max-normalization is 2*(.05+.05+.08)*(1+j) < 0.4, so a
+            # healthy fleet can never cross the delta threshold at any W
+            patterns[name] = np.stack([
+                np.clip(beta0 * (1 + 0.05 * rng.uniform(-1, 1, W)), 0, 1),
+                np.clip(mu0 * (1 + 0.05 * rng.uniform(-1, 1, W)), 0, 1),
+                np.clip(sig0 * (1 + 0.08 * rng.uniform(-1, 1, W)), 0, 1),
+            ], axis=1).astype(np.float32)
+            kinds[name] = kind
+            return patterns[name]
+
+        gemm = add(GEMM, Kind.GPU, 0.55, 0.92, 0.03)
+        allg = add(ALLGATHER, Kind.COMM, 0.15, 0.55, 0.05)
+        add(H2D, Kind.MEM, 0.01, 0.7, 0.03)
+        dl = add(DATALOADER_STACK, Kind.PYTHON, 0.005, 0.5, 0.05)
+        fwd = add(FORWARD_STACK, Kind.PYTHON, 0.004, 0.4, 0.05)
+        gc = add(GC_STACK, Kind.PYTHON, 0.0005, 0.1, 0.03)
+        for i in range(len(patterns), n_functions):
             kind = [Kind.GPU, Kind.COMM, Kind.PYTHON, Kind.MEM][i % 4]
             beta0 = {Kind.GPU: 0.5, Kind.COMM: 0.15, Kind.PYTHON: 0.005,
                      Kind.MEM: 0.05}[kind] / max(1, n_functions // 8)
-            mu0 = 0.8
-            p = np.stack([
-                np.clip(beta0 * (1 + 0.05 * rng.standard_normal(W)), 0, 1),
-                np.clip(mu0 * (1 + 0.05 * rng.standard_normal(W)), 0, 1),
-                np.clip(0.05 * (1 + 0.3 * rng.standard_normal(W)), 0, 1),
-            ], axis=1).astype(np.float32)
-            name = f"{kind.name.lower()}_func_{i}"
-            patterns[name] = p
-            kinds[name] = kind
-        # inject: GPU throttle on a random 1% subset for function 0
-        thr = self._fault(F.GpuThrottle)
-        if thr:
-            idx = np.asarray(thr[0].workers)
-            f0 = next(k for k, v in kinds.items() if v == Kind.GPU)
-            patterns[f0][idx, 0] = np.clip(
-                patterns[f0][idx, 0] * thr[0].slowdown, 0, 1)
-            patterns[f0][idx, 1] = thr[0].util
+            add(f"{kind.name.lower()}_func_{i}", kind, beta0, 0.8, 0.05)
+
+        # -- fault signatures (one per production case) --------------------
+        for f in self._fault(F.GpuThrottle):
+            # C1P1: longer GEMMs (beta up) at LOW SM utilization (mu down)
+            idx = np.asarray(list(f.workers), np.int64)
+            gemm[idx, 0] = np.clip(gemm[idx, 0] * f.slowdown, 0, 1)
+            gemm[idx, 1] = f.util
+        for f in self._fault(F.NvlinkDown):
+            # C1P2: fallback traffic at HIGH PCIe mu on the fault workers;
+            # everyone in their DP groups stalls (beta above the COMM box)
+            idx = np.asarray(list(f.workers), np.int64)
+            groups = {w // f.group_size for w in f.workers}
+            member = np.isin(np.arange(W) // f.group_size, list(groups))
+            allg[member, 0] = np.clip(allg[member, 0] * f.slowdown, 0, 1)
+            allg[member, 1] = 0.35
+            allg[idx, 1] = 0.9
+        for f in self._fault(F.RingSlowLink):
+            # §3 Fig. 5b/5c: every worker's mean drops to ~rho; the slow
+            # worker is STABLE while the rest of the ring fluctuates
+            allg[:, 1] = np.clip(
+                f.rho * (1 + 0.03 * rng.standard_normal(W)), 0, 1)
+            allg[:, 2] = np.clip(
+                0.2 * (1 + 0.2 * rng.standard_normal(W)), 0.05, 1)
+            allg[f.slow_worker, 2] = 0.01
+        for f in self._fault(F.SlowDataloader):
+            # C2P1: socket recv dominates on ALL workers
+            dl[:, 0] = np.clip(dl[:, 0] * f.slowdown, 0, 1)
+            dl[:, 1] = 0.35
+        for f in self._fault(F.CpuBoundForward):
+            # C2P2: CPU-bound forward() on the affected workers
+            idx = np.asarray(list(f.workers) if f.workers
+                             else list(range(W)))
+            fwd[idx, 0] = np.clip(fwd[idx, 0] * f.slowdown, 0, 1)
+            fwd[idx, 1] = 0.9
+        for f in self._fault(F.AsyncGc):
+            # C2P3: random workers pause in non-CPU-intensive frames
+            hit = np.flatnonzero(rng.random(W) < f.probability)
+            if hit.size == 0:
+                hit = np.array([int(rng.integers(0, W))])
+            gc[hit, 0] = np.clip(
+                f.probability * f.pause_s / self.cfg.iteration_s, 0, 1)
+            gc[hit, 1] = 0.08
         return patterns, kinds

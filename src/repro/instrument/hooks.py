@@ -59,8 +59,12 @@ class PerfTracker:
     def _finish_window(self):
         self._window_deadline = None
         profile = self.tracer.stop_window()
+        # wire mode: the true single-worker daemon shape — and it reuses
+        # the (E, n) batch the tracer pre-packed onto profile.packed, which
+        # the fleet-wide gather path would rebuild from raw streams
         res = self.service.diagnose_profiles([profile],
-                                             trigger=self.last_trigger)
+                                             trigger=self.last_trigger,
+                                             mode="wire")
         self.results.append(res)
 
     def flush(self) -> Optional[DiagnosisResult]:

@@ -18,3 +18,5 @@ from repro.summarize.packing import (PackedEvents, pack_profile,  # noqa: F401
                                      resolve_kinds)
 from repro.summarize.engine import summarize_profile  # noqa: F401
 from repro.summarize.aggregate import PatternAggregator  # noqa: F401
+from repro.summarize.fleet import (FleetSummary, pack_fleet,  # noqa: F401
+                                   summarize_fleet)

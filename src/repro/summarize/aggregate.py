@@ -56,6 +56,31 @@ class PatternAggregator:
             self._kinds[name] = kind
         return j
 
+    # -- columnar fast path (fleet-batched summarization) -------------------
+    def reserve_workers(self, count: int) -> int:
+        """Pre-assign ``count`` worker rows for a block scatter; returns the
+        first row id.  Used by the fleet-batched path, which fills whole
+        (W, F, 3) blocks at once instead of streaming per-worker dicts."""
+        base = self._n_workers
+        self._ensure(base + count, len(self._names))
+        self._n_workers = base + count
+        return base
+
+    def intern(self, name: str, kind: Optional[Kind] = None) -> int:
+        """Public column interning: same first-seen-kind semantics the
+        streaming path applies upload by upload."""
+        return self._intern(name, kind)
+
+    def scatter_block(self, row0: int, block: np.ndarray) -> None:
+        """Write a dense (Wb, Fb, 3) pattern block at rows ``row0..`` into
+        the first ``Fb`` columns — the direct scatter-reduce target of the
+        fleet-batched path (no per-worker dicts, no msgpack)."""
+        Wb, Fb = block.shape[0], block.shape[1]
+        if row0 + Wb > self._buf.shape[0] or Fb > self._buf.shape[1]:
+            raise ValueError("scatter_block outside reserved buffer: call "
+                             "reserve_workers/intern first")
+        self._buf[row0:row0 + Wb, :Fb] = block
+
     # -- streaming ---------------------------------------------------------
     def add_patterns(self, pats: Dict[str, np.ndarray],
                      kinds: Optional[Dict[str, Kind]] = None) -> int:

@@ -80,10 +80,11 @@ class NumpyBackend:
             return np.zeros((E, 3))
         nz = u > 0.0
         csum = np.cumsum(u, axis=1, dtype=np.float32)
-        # pairwise row sum, NOT csum[:, -1]: the python oracle's target
-        # comes from u.sum(), and sequential-f32 cumsum drifts from it by
-        # enough to flip borderline feasibility on long rows
-        total = u.sum(axis=1).astype(np.float64)
+        # float64 row sum, NOT csum[:, -1]: the python oracle's target
+        # comes from the same f64 sum (exact for f32 addends, so identical
+        # under any zero-padding width), while sequential-f32 cumsum drifts
+        # from it by enough to flip borderline feasibility on long rows
+        total = u.sum(axis=1, dtype=np.float64)
         target = self._mass_fraction() * total - 1e-9
         empty = total <= 0.0
         all_empty = np.stack([np.zeros(E), np.zeros(E),
@@ -186,6 +187,13 @@ class PallasBackend:
         return self._jnp, self._kernel
 
     def available(self) -> bool:
+        if self._jnp is not None:
+            return True
+        # spec lookup first: a jax-free process (no jax installed) must be
+        # able to ask 'is pallas available?' without paying the jax import
+        import importlib.util
+        if importlib.util.find_spec("jax") is None:
+            return False
         try:
             self._modules()
             return True

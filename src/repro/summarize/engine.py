@@ -27,6 +27,23 @@ def _resolve_backend(backend: BackendLike) -> SummarizeBackend:
     return backend
 
 
+def row_weights(u: np.ndarray, stats: np.ndarray, lengths: np.ndarray,
+                rates) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-row ``(mean, std, weight)`` under the padding-independence
+    conventions every summarization path must share float-exactly (the
+    fleet==wire byte-identity invariant hangs on it): all-zero rows weigh
+    their true (unpadded) window with zeroed moments, no row can outweigh
+    its own window, and the weight is ``|L(e)|`` seconds (count / rate).
+    ``rates`` may be a per-row array or a scalar."""
+    mean, std, cnt = stats[:, 0], stats[:, 1], stats[:, 2]
+    lengths = lengths.astype(np.float64)
+    empty = u.sum(axis=1) <= 0.0
+    cnt = np.where(empty, lengths, np.minimum(cnt, lengths))
+    mean = np.where(empty, 0.0, mean)
+    std = np.where(empty, 0.0, std)
+    return mean, std, cnt / rates
+
+
 def summarize_profile(profile: WorkerProfile,
                       kind_of: Optional[Dict[str, Kind]] = None,
                       backend: BackendLike = None,
@@ -42,7 +59,9 @@ def summarize_profile(profile: WorkerProfile,
     be = _resolve_backend(backend)
     kinds = resolve_kinds(profile, kind_of)
     t0, t1 = profile.window
-    T = t1 - t0
+    # degenerate (zero-width) windows: beta is 0/tiny = 0, matching the
+    # fleet-batched path instead of dying on a ZeroDivisionError
+    T = max(t1 - t0, np.finfo(float).tiny)
     beta = critical_time_by_function(profile.events, profile.window)
 
     # every function named by an event gets a pattern, even if all its
@@ -61,15 +80,8 @@ def summarize_profile(profile: WorkerProfile,
     packed = pack_profile(profile, kind_of)
     if packed.n_events and packed.u.shape[1]:
         stats = np.asarray(be.batch_stats(packed.u), np.float64)
-        mean, std, cnt = stats[:, 0], stats[:, 1], stats[:, 2]
-        lengths = packed.lengths.astype(np.float64)
-        # padding-independent conventions: all-zero rows weigh their true
-        # (unpadded) window; no row can outweigh its own window
-        empty = packed.u.sum(axis=1) <= 0.0
-        cnt = np.where(empty, lengths, np.minimum(cnt, lengths))
-        mean = np.where(empty, 0.0, mean)
-        std = np.where(empty, 0.0, std)
-        w = cnt / packed.rates                             # |L(e)| seconds
+        mean, std, w = row_weights(packed.u, stats, packed.lengths,
+                                   packed.rates)
         gid = np.asarray([index[nm] for nm in packed.names],
                          np.int64)[packed.fn_ids]
         num_mu = np.bincount(gid, weights=w * mean, minlength=F)

@@ -62,6 +62,7 @@ class Trainer:
         self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
         self.history: list = []
         self.mitigations: list = []
+        self.last_diagnosis = None       # most recent consumed PT result
 
     # ------------------------------------------------------------------
     def init_state(self, resume: bool = True):
@@ -126,6 +127,7 @@ class Trainer:
         if not self.pt or not self.pt.results:
             return
         res = self.pt.results.pop()
+        self.last_diagnosis = res
         plans = plan_mitigations(res.diagnoses, fleet_size=1)
         for p in plans:
             if p.action == Action.NONE:

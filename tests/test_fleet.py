@@ -1,0 +1,319 @@
+"""ISSUE 2: fleet-batched diagnosis (DESIGN.md §5) + detector/localizer
+correctness fixes.
+
+The scenario matrix runs every fault model in ``repro/core/faults.py``
+end-to-end in BOTH raw-profile and pattern mode, asserting the expected
+function/kind is localized — and that the fleet-batched path returns
+byte-identical diagnoses to the per-worker upload path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core.daemon import summarize_and_upload
+from repro.core.detector import DetectorConfig, IterationDetector
+from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
+from repro.core.localizer import Localizer
+from repro.core.critical_path import (critical_time_by_function,
+                                      fleet_critical_times)
+from repro.core.service import PerfTrackerService
+from repro.core.simulation import (ALLGATHER, DATALOADER_STACK, FORWARD_STACK,
+                                   GC_STACK, GEMM, FleetSimulator, SimConfig)
+from repro.summarize import PatternAggregator, pack_fleet, summarize_fleet
+
+#: (fault list, expected localized function substring-match, expected kind)
+SCENARIOS = [
+    pytest.param([F.GpuThrottle(workers=range(4))], GEMM, Kind.GPU,
+                 id="C1P1_gpu_throttle"),
+    pytest.param([F.NvlinkDown(workers=[5], group_size=16)], ALLGATHER,
+                 Kind.COMM, id="C1P2_nvlink_down"),
+    pytest.param([F.RingSlowLink(slow_worker=9, rho=0.4)], ALLGATHER,
+                 Kind.COMM, id="S3_ring_slow_link"),
+    pytest.param([F.SlowDataloader()], DATALOADER_STACK, Kind.PYTHON,
+                 id="C2P1_slow_dataloader"),
+    pytest.param([F.CpuBoundForward(workers=range(6))], FORWARD_STACK,
+                 Kind.PYTHON, id="C2P2_cpu_forward"),
+    pytest.param([F.AsyncGc(probability=0.5)], GC_STACK, Kind.PYTHON,
+                 id="C2P3_async_gc"),
+]
+
+
+def assert_identical(a, b):
+    """Byte-identical diagnoses between two DiagnosisResults."""
+    assert len(a.diagnoses) == len(b.diagnoses)
+    for da, db in zip(a.diagnoses, b.diagnoses):
+        aa, bb = da.abnormality, db.abnormality
+        assert aa.function == bb.function
+        assert da.hint == db.hint
+        assert aa.reason == bb.reason
+        assert aa.kind == bb.kind
+        np.testing.assert_array_equal(aa.workers, bb.workers)
+        np.testing.assert_array_equal(aa.patterns, bb.patterns)
+        np.testing.assert_array_equal(aa.d_expect, bb.d_expect)
+        np.testing.assert_array_equal(aa.delta, bb.delta)
+        np.testing.assert_array_equal(aa.typical, bb.typical)
+
+
+# -- scenario matrix: raw-profile mode + fleet/wire parity --------------------
+
+@pytest.mark.parametrize("faults,expect,kind", SCENARIOS)
+def test_raw_mode_scenario(faults, expect, kind):
+    sim = FleetSimulator(SimConfig(n_workers=32, window_s=2.0, rate_hz=2000,
+                                   seed=7), faults)
+    profiles = sim.profile_window()
+    svc = PerfTrackerService(summarize_backend="numpy")
+    fleet = svc.diagnose_profiles(profiles, mode="fleet")
+    d = next((d for d in fleet.diagnoses
+              if d.abnormality.function == expect), None)
+    assert d is not None, (expect, fleet.functions())
+    assert d.abnormality.kind == kind
+    assert_identical(fleet, svc.diagnose_profiles(profiles, mode="wire"))
+
+
+def test_raw_mode_healthy_clean_and_identical():
+    sim = FleetSimulator(SimConfig(n_workers=32, window_s=2.0, rate_hz=2000,
+                                   seed=3), [])
+    profiles = sim.profile_window()
+    svc = PerfTrackerService(summarize_backend="numpy")
+    fleet = svc.diagnose_profiles(profiles, mode="fleet")
+    assert fleet.functions() == []
+    assert_identical(fleet, svc.diagnose_profiles(profiles, mode="wire"))
+
+
+# -- scenario matrix: pattern mode --------------------------------------------
+
+@pytest.mark.parametrize("faults,expect,kind", SCENARIOS)
+def test_pattern_mode_scenario(faults, expect, kind):
+    sim = FleetSimulator(SimConfig(n_workers=64, seed=7), faults)
+    pats, kinds = sim.synth_patterns(20)
+    res = PerfTrackerService().diagnose_patterns(pats, kinds)
+    d = next((d for d in res.diagnoses
+              if d.abnormality.function == expect), None)
+    assert d is not None, (expect, res.functions())
+    assert d.abnormality.kind == kind
+
+
+def test_pattern_mode_healthy_clean():
+    sim = FleetSimulator(SimConfig(n_workers=64, seed=7), [])
+    pats, kinds = sim.synth_patterns(20)
+    assert PerfTrackerService().diagnose_patterns(pats, kinds).functions() \
+        == []
+
+
+def test_pattern_mode_expected_workers():
+    faults = [F.GpuThrottle(workers=[3, 11])]
+    sim = FleetSimulator(SimConfig(n_workers=64, seed=1), faults)
+    pats, kinds = sim.synth_patterns(12)
+    res = PerfTrackerService().diagnose_patterns(pats, kinds)
+    d = next(d for d in res.diagnoses if d.abnormality.function == GEMM)
+    assert set(d.abnormality.workers.tolist()) == {3, 11}
+
+
+# -- fleet-batched summarization unit tests ----------------------------------
+
+def _profile(seed=0, worker=0, rate=1000.0, T=4.0, with_orphan=False):
+    rng = np.random.default_rng(seed)
+    n = int(T * rate)
+    gpu = np.clip(rng.normal(0.7, 0.2, n), 0, 1)
+    cpu = np.clip(rng.normal(0.3, 0.2, n), 0, 1)
+    gpu[int(n * 0.37):int(n * 0.52)] = 0.0
+    events = [
+        FunctionEvent("matmul", Kind.GPU, 0.0, 0.35 * T, worker),
+        FunctionEvent("matmul", Kind.GPU, 0.37 * T, 0.72 * T, worker),
+        FunctionEvent("allreduce", Kind.COMM, 0.5 * T, 0.77 * T, worker),
+        FunctionEvent("data.next", Kind.PYTHON, 0.77 * T, 0.97 * T, worker,
+                      depth=1),
+    ]
+    if with_orphan:   # stream absent -> zero-weight pattern, beta only
+        events.append(FunctionEvent("h2d", Kind.MEM, 0.05 * T, 0.1 * T,
+                                    worker))
+    return WorkerProfile(
+        worker=worker, window=(0.0, T), events=events,
+        streams={"gpu_sm": SampleStream(rate, 0.0, gpu),
+                 "pcie_tx": SampleStream(rate, 0.0, gpu * 0.5),
+                 "cpu": SampleStream(rate, 0.0, cpu)})
+
+
+def _upload_aggregate(profiles, kind_of=None):
+    uploads = [summarize_and_upload(p, kind_of, backend="numpy")
+               for p in profiles]
+    return PatternAggregator(expected_workers=len(uploads)) \
+        .extend(uploads).finalize()
+
+
+def test_summarize_fleet_matches_upload_path():
+    profiles = [_profile(seed=s, worker=s, with_orphan=(s % 2 == 0))
+                for s in range(5)]
+    fs = summarize_fleet(profiles, backend="numpy")
+    agg, kinds = fs.agg.finalize()
+    ref_agg, ref_kinds = _upload_aggregate(profiles)
+    assert kinds == ref_kinds
+    assert list(agg) == list(ref_agg)
+    for name in ref_agg:
+        np.testing.assert_array_equal(np.asarray(agg[name]),
+                                      np.asarray(ref_agg[name]))
+    assert fs.n_rows > 0
+    # pattern_bytes reports exactly what the wire uploads would have weighed
+    wire_bytes = sum(len(summarize_and_upload(p, backend="numpy").payload)
+                     for p in profiles)
+    assert fs.pattern_bytes == wire_bytes
+
+
+def test_summarize_fleet_kind_override():
+    profiles = [_profile(seed=s, worker=s) for s in range(3)]
+    kind_of = {"allreduce": Kind.PYTHON}     # reroute to the cpu stream
+    agg, kinds = summarize_fleet(profiles, kind_of,
+                                 backend="numpy").agg.finalize()
+    ref_agg, ref_kinds = _upload_aggregate(profiles, kind_of)
+    assert kinds["allreduce"] == Kind.PYTHON == ref_kinds["allreduce"]
+    for name in ref_agg:
+        np.testing.assert_array_equal(np.asarray(agg[name]),
+                                      np.asarray(ref_agg[name]))
+
+
+def test_pack_fleet_groups_by_stream_rate():
+    profiles = [_profile(seed=0, worker=0, rate=1000.0),
+                _profile(seed=1, worker=1, rate=500.0)]
+    fb = pack_fleet(profiles)
+    assert sorted({g.rate for g in fb.groups}) == [500.0, 1000.0]
+    total = sum(g.u.shape[0] for g in fb.groups)
+    assert total == 8                        # 4 events x 2 workers
+    for g in fb.groups:
+        # rows only reference events of the worker with that stream rate
+        assert set(fb.events.worker[g.rows].tolist()) \
+            == ({0} if g.rate == 1000.0 else {1})
+
+
+def test_fleet_row_longer_than_last_length_bucket():
+    from repro.summarize.fleet import _BUCKETS
+    rate, T = 40000.0, 1.0
+    n = int(rate * T)
+    assert n > _BUCKETS[-1]
+    prof = WorkerProfile(
+        worker=0, window=(0.0, T),
+        events=[FunctionEvent("big", Kind.GPU, 0.0, T, 0)],
+        streams={"gpu_sm": SampleStream(rate, 0.0,
+                                        np.full(n, 0.5))})
+    fb = pack_fleet([prof])
+    assert sum(g.u.shape[0] for g in fb.groups) == 1   # row not dropped
+    agg, _ = summarize_fleet([prof], backend="numpy").agg.finalize()
+    ref, _ = _upload_aggregate([prof])
+    np.testing.assert_array_equal(np.asarray(agg["big"]),
+                                  np.asarray(ref["big"]))
+
+
+def test_summarize_fleet_empty_and_eventless_workers():
+    profiles = [
+        _profile(seed=0, worker=0),
+        WorkerProfile(worker=1, window=(0.0, 4.0)),          # no events
+        WorkerProfile(worker=2, window=(0.0, 4.0),           # no streams
+                      events=[FunctionEvent("matmul", Kind.GPU,
+                                            0.0, 2.0, 2)]),
+    ]
+    agg, kinds = summarize_fleet(profiles, backend="numpy").agg.finalize()
+    ref_agg, ref_kinds = _upload_aggregate(profiles)
+    assert kinds == ref_kinds
+    for name in ref_agg:
+        np.testing.assert_array_equal(np.asarray(agg[name]),
+                                      np.asarray(ref_agg[name]))
+    # streamless worker still reports beta (critical path needs no samples)
+    assert np.asarray(agg["matmul"])[2, 0] > 0
+
+
+def test_fleet_critical_times_matches_per_worker():
+    profiles = [_profile(seed=s, worker=s, with_orphan=True)
+                for s in range(4)]
+    profiles.append(WorkerProfile(worker=4, window=(0.0, 1.0)))
+    batched = fleet_critical_times(profiles)
+    for p, got in zip(profiles, batched):
+        ref = critical_time_by_function(p.events, p.window)
+        assert list(got) == list(ref)
+        for name in ref:
+            assert got[name] == ref[name]    # bit-identical
+
+
+# -- detector re-arm (bugfix) -------------------------------------------------
+
+D, O = "dataloader.next", "optimizer.step"
+
+
+def _feed(det, n, t0, dur):
+    t, trigs = t0, []
+    for _ in range(n):
+        det.feed(D, t)
+        trig = det.feed(O, t + dur * 0.97)
+        if trig:
+            trigs.append(trig)
+        t += dur
+    return t, trigs
+
+
+def test_slowdown_fires_once_while_degraded():
+    det = IterationDetector(DetectorConfig(n_recent=20, rearm_cooldown=0))
+    t, _ = _feed(det, 30, 0.0, 1.0)
+    _feed(det, 60, t, 1.3)
+    assert len(det.triggers) == 1            # was: one per iteration
+
+
+def test_slowdown_cooldown_refires_while_still_degraded():
+    det = IterationDetector(DetectorConfig(n_recent=20, rearm_cooldown=25))
+    t, _ = _feed(det, 30, 0.0, 1.0)
+    _feed(det, 80, t, 1.3)
+    # one initial trigger + periodic cooldown reminders, NOT one per iter
+    assert 2 <= len(det.triggers) <= 4
+
+
+def test_slowdown_rearms_after_recovery():
+    det = IterationDetector(DetectorConfig(n_recent=20, rearm_cooldown=0))
+    t, _ = _feed(det, 30, 0.0, 1.0)
+    t, trigs1 = _feed(det, 30, t, 1.3)       # degrade: one trigger
+    assert len(trigs1) == 1
+    t, _ = _feed(det, 40, t, 1.0)            # recover: mean back at baseline
+    _, trigs2 = _feed(det, 30, t, 1.3)       # degrade again: NEW trigger
+    assert len(trigs2) == 1
+    assert len(det.triggers) == 2
+
+
+def test_blockage_fires_once_per_stall():
+    det = IterationDetector()
+    t, _ = _feed(det, 15, 0.0, 1.0)
+    assert det.check_blockage(t + 10.0) is not None
+    assert det.check_blockage(t + 11.0) is None      # was: every poll
+    assert det.check_blockage(t + 50.0) is None
+    # events flowing again re-arms blockage detection
+    t2, _ = _feed(det, 3, t + 60.0, 1.0)
+    assert det.check_blockage(t2 + 10.0) is not None
+    assert len([g for g in det.triggers if g.reason == "blockage"]) == 2
+
+
+# -- localizer self-pair masking (bugfix) -------------------------------------
+
+def test_delta_distance_masks_self_pairs():
+    W = 8
+    pats = np.tile(np.array([0.5, 0.9, 0.05], np.float32), (W, 1))
+    pats[3] = [0.9, 0.1, 0.05]
+    # n_peers >= W: every worker's own index is in the peer sample
+    delta = Localizer(n_peers=W).delta_distance(pats, function="f")
+    # outlier differs from ALL other workers: exactly 1.0, not (W-1)/W
+    assert delta[3] == 1.0
+    # normal workers differ only from the outlier: exactly 1/(W-1)
+    np.testing.assert_allclose(np.delete(delta, 3), 1.0 / (W - 1))
+
+
+def test_delta_distance_single_worker_is_zero():
+    pats = np.array([[0.5, 0.9, 0.05]], np.float32)
+    assert Localizer().delta_distance(pats, function="f")[0] == 0.0
+
+
+# -- report hint (bugfix): dead abn_beta branch removed -----------------------
+
+def test_root_cause_hint_uses_pattern_beta():
+    from repro.core.localizer import Abnormality
+    from repro.core.report import root_cause_hint
+    a = Abnormality(
+        function=GEMM, workers=np.array([0]), kind=Kind.GPU,
+        d_expect=np.array([0.0]), delta=np.array([1.0]),
+        patterns=np.array([[0.9, 0.3, 0.05]], np.float32),
+        typical=np.array([0.5, 0.9, 0.05], np.float32))
+    assert not hasattr(a, "abn_beta")
+    assert "throttling" in root_cause_hint(a, 32)
