@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: test deps bench bench-summarize bench-fleet
+.PHONY: test deps lint bench bench-summarize bench-fleet bench-online \
+        bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -8,6 +9,9 @@ deps:
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+lint:
+	ruff check .
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
@@ -17,3 +21,26 @@ bench-summarize:
 
 bench-fleet:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only fleet_diagnosis
+
+bench-online:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only online_pipeline
+
+# the CI benchmark-regression gate: run the three gated benchmarks with the
+# CI-pinned sizes, emit machine-readable results, compare against the
+# committed baselines (benchmarks/baselines.json)
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline
+GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
+GATE_JSON ?= reports/bench.json
+
+bench-gate:
+	mkdir -p $(dir $(GATE_JSON))
+	$(GATE_ENV) PYTHONPATH=src:. $(PY) benchmarks/run.py \
+	    --only $(GATE_MODULES) --json $(GATE_JSON)
+	$(PY) benchmarks/check_regression.py $(GATE_JSON) --require-all
+
+# after an INTENTIONAL perf change: refresh baseline values and commit
+bench-gate-update:
+	mkdir -p $(dir $(GATE_JSON))
+	$(GATE_ENV) PYTHONPATH=src:. $(PY) benchmarks/run.py \
+	    --only $(GATE_MODULES) --json $(GATE_JSON)
+	$(PY) benchmarks/check_regression.py $(GATE_JSON) --update

@@ -15,7 +15,6 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import faults as F
-from repro.core.events import Kind
 from repro.core.service import PerfTrackerService
 from repro.core.simulation import (ALLGATHER, GEMM, FleetSimulator,
                                    SimConfig)

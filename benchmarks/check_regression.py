@@ -1,0 +1,138 @@
+"""Benchmark-regression gate (ISSUE 3 satellite).
+
+Compares a ``benchmarks/run.py --json`` results file against the committed
+``benchmarks/baselines.json`` and exits non-zero on any regression, so CI
+fails before a PR silently gives back the speed the perf work bought.
+
+Baseline schema::
+
+    {
+      "default_tolerance": 0.3,
+      "metrics": {
+        "<metric>": {"value": 5.7, "direction": "higher",
+                     "tolerance": 0.3, "note": "..."},
+        "<metric>": {"equals": "Y", "note": "..."}
+      }
+    }
+
+Per-metric semantics:
+
+  * ``equals``             — exact match (parity / accuracy flags);
+  * ``direction: higher``  — bigger is better (speedups, byte ratios);
+                             fail when value < baseline * (1 - tolerance);
+  * ``direction: lower``   — smaller is better (latencies);
+                             fail when value > baseline * (1 + tolerance);
+  * ``direction: both``    — deterministic quantities; fail outside
+                             baseline * (1 -/+ tolerance).
+
+Only RELATIVE metrics (speedup ratios, byte ratios, deterministic counts,
+parity flags) belong in the committed baselines: absolute wall-clock moves
+with the CI machine, ratios of two runs on the same machine mostly don't.
+
+``--update`` rewrites the ``value`` of every numeric baseline entry from
+the given results file (tolerances, directions, and notes are kept) —
+run it locally after an intentional perf change and commit the diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINES = Path(__file__).parent / "baselines.json"
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_metric(name, spec, value, default_tol):
+    """Returns (ok, detail)."""
+    if "equals" in spec:
+        ok = str(value) == str(spec["equals"])
+        return ok, f"expected == {spec['equals']!r}, got {value!r}"
+    base = float(spec["value"])
+    tol = float(spec.get("tolerance", default_tol))
+    direction = spec.get("direction", "both")
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        return False, f"non-numeric result {value!r}"
+    if math.isnan(v):
+        return False, "result is NaN (benchmark errored?)"
+    lo, hi = base * (1 - tol), base * (1 + tol)
+    if direction == "higher":
+        ok = v >= lo
+        bound = f">= {lo:.4g}"
+    elif direction == "lower":
+        ok = v <= hi
+        bound = f"<= {hi:.4g}"
+    else:
+        ok = lo <= v <= hi
+        bound = f"in [{lo:.4g}, {hi:.4g}]"
+    return ok, f"baseline {base:.4g} (tol {tol:.0%}, {direction}): " \
+               f"need {bound}, got {v:.4g}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="benchmarks/run.py --json output")
+    ap.add_argument("--baselines", default=str(DEFAULT_BASELINES))
+    ap.add_argument("--require-all", action="store_true",
+                    help="missing baseline metrics fail (CI mode; default "
+                         "skips metrics absent from the results)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite numeric baseline values from the results")
+    args = ap.parse_args()
+
+    results = load(args.results)
+    metrics = results.get("metrics", {})
+    baselines = load(args.baselines)
+    default_tol = float(baselines.get("default_tolerance", 0.3))
+    specs = baselines.get("metrics", {})
+
+    if args.update:
+        updated = 0
+        for name, spec in specs.items():
+            if "value" in spec and name in metrics:
+                spec["value"] = round(float(metrics[name]), 4)
+                updated += 1
+        with open(args.baselines, "w") as f:
+            json.dump(baselines, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"updated {updated}/{len(specs)} baseline values "
+              f"in {args.baselines}")
+        return
+
+    failures = []
+    skipped = []
+    for name, spec in sorted(specs.items()):
+        if name not in metrics:
+            (failures if args.require_all else skipped).append(
+                (name, "metric missing from results"))
+            continue
+        ok, detail = check_metric(name, spec, metrics[name], default_tol)
+        status = "OK  " if ok else "FAIL"
+        print(f"{status} {name}: {detail}")
+        if not ok:
+            failures.append((name, detail))
+    for name, why in skipped:
+        print(f"SKIP {name}: {why}")
+    if results.get("failures"):
+        failures.append(("(harness)",
+                         f"{results['failures']} benchmark module(s) errored"))
+
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):", file=sys.stderr)
+        for name, detail in failures:
+            print(f"  {name}: {detail}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall {len(specs) - len(skipped)} gated metrics within "
+          f"tolerance ({len(skipped)} skipped)")
+
+
+if __name__ == "__main__":
+    main()

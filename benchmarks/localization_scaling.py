@@ -3,6 +3,7 @@ The paper reports ~3 minutes at 1,000,000 workers; the vectorized numpy
 localizer here is benchmarked on the same simulated-pattern methodology."""
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -11,8 +12,12 @@ from repro.core import faults as F
 from repro.core.service import PerfTrackerService
 from repro.core.simulation import GEMM, FleetSimulator, SimConfig
 
+#: smoke override (tests/test_benchmarks_smoke.py): comma-separated sizes
+SIZES = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_LOC_SIZES", "1000,10000,100000,1000000").split(",") if x)
 
-def run(sizes=(1_000, 10_000, 100_000, 1_000_000), n_functions=20):
+
+def run(sizes=SIZES, n_functions=20):
     rows = []
     for w in sizes:
         sim = FleetSimulator(

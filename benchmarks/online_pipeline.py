@@ -1,0 +1,114 @@
+"""ISSUE 3: online incident pipeline — steady-state cost of differential
+escalation (DESIGN.md §7).
+
+Runs the multi-window fault matrix through ``ScenarioRunner`` twice per
+case:
+
+  * ``escalated`` — fleet at the cheap base rate, only workers implicated
+    by the previous window's localization at the full rate;
+  * ``full``      — every worker at the full rate every window (what a
+    naive always-on profiler costs).
+
+Acceptance (ISSUE 3): at W=128 the escalated run profiles >= 4x fewer raw
+bytes than always-full-rate, with no loss of localization accuracy on the
+fault matrix (every case's expected incident found, naming the culprit
+workers, in BOTH runs).  Rows::
+
+    online/bytes_ratio_W<W>,   total_full_bytes/total_escalated_bytes
+    online/window_latency_us,  median per-window summarize+localize wall
+
+Env knobs (CI smoke): ``REPRO_BENCH_ONLINE_W`` (default 128),
+``REPRO_BENCH_ONLINE_WINDOWS`` (default 8), ``REPRO_BENCH_ONLINE_CASES``
+(comma-separated case names, default all six).
+"""
+from __future__ import annotations
+
+import os
+import statistics
+
+W = int(os.environ.get("REPRO_BENCH_ONLINE_W", "128"))
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_ONLINE_WINDOWS", "8"))
+INJECT, REMOVE = 2, max(3, N_WINDOWS - 2)
+WINDOW_S = 1.0
+BASE_HZ, FULL_HZ = 250.0, 2000.0
+
+
+def _cases():
+    from repro.core import faults as F
+    from repro.core.simulation import (ALLGATHER, DATALOADER_STACK,
+                                       FORWARD_STACK, GC_STACK, GEMM)
+    cases = {
+        "C1P1_gpu_throttle": (F.GpuThrottle(workers=(3, W // 2 + 1)),
+                              GEMM, {3, W // 2 + 1}),
+        "C1P2_nvlink_down": (F.NvlinkDown(workers=[5], group_size=8),
+                             ALLGATHER, {5}),
+        "S3_ring_slow_link": (F.RingSlowLink(slow_worker=9, rho=0.4),
+                              ALLGATHER, {9}),
+        "C2P1_slow_dataloader": (F.SlowDataloader(), DATALOADER_STACK, None),
+        "C2P2_cpu_forward": (F.CpuBoundForward(workers=range(6)),
+                             FORWARD_STACK, set(range(6))),
+        "C2P3_async_gc": (F.AsyncGc(probability=0.5, pause_s=0.25),
+                          GC_STACK, None),
+    }
+    only = [c for c in os.environ.get("REPRO_BENCH_ONLINE_CASES",
+                                      "").split(",") if c]
+    return {k: v for k, v in cases.items() if not only or k in only}
+
+
+def _run_case(fault, escalated: bool):
+    from repro.core.simulation import SimConfig
+    from repro.online import (EscalationPolicy, ScenarioRunner,
+                              ScheduledFault)
+    esc = EscalationPolicy(n_workers=W, base_rate_hz=BASE_HZ,
+                           full_rate_hz=FULL_HZ,
+                           max_escalated=max(4, W // 16)) \
+        if escalated else None
+    runner = ScenarioRunner(
+        SimConfig(n_workers=W, window_s=WINDOW_S, rate_hz=FULL_HZ, seed=5),
+        [ScheduledFault(fault, INJECT, REMOVE)],
+        n_windows=N_WINDOWS, escalation=esc)
+    return runner.run()
+
+
+def _case_ok(res, expect, culprits) -> bool:
+    incs = [i for i in res.incidents if i.function == expect]
+    if not incs:
+        return False
+    if culprits is not None and not culprits <= set(incs[0].workers):
+        return False
+    return True
+
+
+def run():
+    rows = []
+    bytes_esc = bytes_full = 0
+    latencies = []
+    ok = True
+    for name, (fault, expect, culprits) in _cases().items():
+        res_esc = _run_case(fault, escalated=True)
+        res_full = _run_case(fault, escalated=False)
+        case_ok = (_case_ok(res_esc, expect, culprits)
+                   and _case_ok(res_full, expect, culprits))
+        ok = ok and case_ok
+        b_esc = sum(r.raw_bytes for r in res_esc.reports)
+        b_full = sum(r.raw_bytes for r in res_full.reports)
+        bytes_esc += b_esc
+        bytes_full += b_full
+        latencies += [r.summarize_s + r.localize_s
+                      for r in res_esc.reports]
+        rows.append((f"online/{name}_W{W}", b_full / max(1, b_esc),
+                     f"bytes_ratio;accuracy={'Y' if case_ok else 'N'}"))
+    ratio = bytes_full / max(1, bytes_esc)
+    rows.append((f"online/bytes_ratio_W{W}", ratio,
+                 f"ratio={ratio:.2f}x;accuracy={'Y' if ok else 'N'};"
+                 f"escalated_mb={bytes_esc/1e6:.1f};"
+                 f"full_mb={bytes_full/1e6:.1f}"))
+    rows.append(("online/window_latency_us",
+                 statistics.median(latencies) * 1e6,
+                 f"median_steady_state_tick;W={W}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

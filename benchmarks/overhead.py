@@ -5,6 +5,7 @@ profiling, across model configs, plus the off-thread pattern-summarization
 and localization times (Fig. 17b)."""
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -14,8 +15,19 @@ from repro.data.pipeline import DataConfig
 from repro.optim.adamw import OptConfig
 from repro.train.loop import TrainConfig, Trainer
 
+#: smoke override (tests/test_benchmarks_smoke.py): "arch:d_model:layers"
+#: triples, comma-separated
+CONFIGS = [(a, int(d), int(layers)) for a, d, layers in
+           (spec.split(":") for spec in os.environ.get(
+               "REPRO_BENCH_OVERHEAD_CONFIGS",
+               "granite-34b:64:2,granite-34b:128:4,"
+               "deepseek-v2-lite-16b:64:3").split(","))]
+STEPS = int(os.environ.get("REPRO_BENCH_OVERHEAD_STEPS", "12"))
 
-def _iter_time(trainer, steps=12, warmup=3):
+
+def _iter_time(trainer, steps=STEPS, warmup=None):
+    if warmup is None:
+        warmup = min(3, steps - 1)
     params, opt_state, _ = trainer.init_state(resume=False)
     import jax.numpy as jnp
     times = []
@@ -32,9 +44,7 @@ def _iter_time(trainer, steps=12, warmup=3):
 
 def run():
     rows = []
-    for arch, d_model, layers in [("granite-34b", 64, 2),
-                                  ("granite-34b", 128, 4),
-                                  ("deepseek-v2-lite-16b", 64, 3)]:
+    for arch, d_model, layers in CONFIGS:
         cfg = reduced(ARCHS[arch], d_model=d_model, layers=layers)
         data = DataConfig(batch=4, seq_len=64)
         base = Trainer(cfg, data, OptConfig(), TrainConfig(

@@ -2,6 +2,8 @@
 accuracy over randomized slow-link positions/severities."""
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
@@ -38,7 +40,7 @@ def run():
                  "Fig5b: high fluctuation"))
     # localization accuracy over trials
     hits = trials = 0
-    for seed in range(10):
+    for seed in range(int(os.environ.get("REPRO_BENCH_RING_TRIALS", "10"))):
         rng = np.random.default_rng(seed)
         slow = int(rng.integers(0, 16))
         rho = float(rng.uniform(0.3, 0.7))

@@ -1,8 +1,13 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+writes machine-readable results (rows + extracted scalar metrics) for the
+CI regression gate (``benchmarks/check_regression.py``)."""
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import re
 import sys
 
 
@@ -15,21 +20,54 @@ MODULES = [
     ("localization_scaling", "Fig. 17c: localization scaling"),
     ("summarize_backends", "ISSUE 1: summarize backend shootout"),
     ("fleet_diagnosis", "ISSUE 2: fleet-batched vs per-worker diagnosis"),
+    ("online_pipeline", "ISSUE 3: online pipeline / differential escalation"),
     ("kernels_bench", "kernel micro-bench"),
     ("roofline_table", "EXPERIMENTS §Roofline (from dry-run artifacts)"),
 ]
+
+_SPEEDUP = re.compile(r"([0-9.eE+-]+)x_vs_([A-Za-z0-9_]+)")
+
+
+def metrics_from_rows(rows):
+    """Flatten benchmark rows into {metric: scalar-or-string}.
+
+    Every row contributes ``<name>:us_per_call``; the free-form ``derived``
+    field is split on ';' and each ``key=value`` token (values may carry a
+    trailing 'x' or '%') and each ``<S>x_vs_<ref>`` speedup token becomes a
+    metric.  Non-numeric values stay strings (e.g. parity flags 'Y'/'N')."""
+    out = {}
+    for name, us, derived in rows:
+        out[f"{name}:us_per_call"] = float(us)
+        for tok in str(derived).split(";"):
+            tok = tok.strip()
+            m = _SPEEDUP.fullmatch(tok)
+            if m:
+                out[f"{name}:speedup_vs_{m.group(2)}"] = float(m.group(1))
+                continue
+            if "=" not in tok:
+                continue
+            key, val = tok.split("=", 1)
+            key, val = key.strip(), val.strip()
+            try:
+                out[f"{name}:{key}"] = float(val.rstrip("x%"))
+            except ValueError:
+                out[f"{name}:{key}"] = val
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module names")
     ap.add_argument("--skip", default="", help="comma-separated module names")
+    ap.add_argument("--json", default="",
+                    help="write machine-readable results to this path")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
     skip = set(filter(None, args.skip.split(",")))
 
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name, desc in MODULES:
         if only and name not in only:
             continue
@@ -39,10 +77,22 @@ def main() -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             for row in mod.run():
                 n, v, d = row
+                all_rows.append((n, float(v), str(d)))
                 print(f"{n},{v:.1f},{d}", flush=True)
         except Exception as e:  # pragma: no cover
             failures += 1
+            all_rows.append((name, math.nan, f"ERROR:{type(e).__name__}:{e}"))
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "rows": [{"name": n, "us_per_call": v, "derived": d}
+                         for n, v, d in all_rows],
+                "metrics": metrics_from_rows(all_rows),
+                "failures": failures,
+            }, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json} ({len(all_rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

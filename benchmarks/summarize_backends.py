@@ -5,12 +5,16 @@ Rows: ``summarize[<backend>]_E<E>_n<n>, us_per_call, speedup-vs-python``.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
-
-GRID = [(64, 256), (256, 256), (256, 512), (1024, 256)]
+#: smoke override (tests/test_benchmarks_smoke.py): "ExN,ExN" pairs
+GRID = [tuple(int(v) for v in pair.split("x"))
+        for pair in os.environ.get(
+            "REPRO_BENCH_SUMMARIZE_GRID",
+            "64x256,256x256,256x512,1024x256").split(",") if pair]
 BACKENDS = ["python", "numpy", "pallas"]
 
 

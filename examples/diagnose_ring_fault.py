@@ -4,7 +4,6 @@ worker's (beta, mu, sigma) pattern, and localize the slow link.
 
   PYTHONPATH=src python examples/diagnose_ring_fault.py
 """
-import numpy as np
 
 from repro.core import faults as F
 from repro.core.mitigation import plan_mitigations

@@ -3,7 +3,6 @@ fault mid-run, watch the online diagnosis fire (paper case C2P1, live).
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS, reduced
 from repro.data.pipeline import DataConfig

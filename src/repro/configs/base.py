@@ -7,8 +7,8 @@ hashed into jit static args and serialized into checkpoints / dry-run reports.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:

@@ -2,7 +2,6 @@
 CPU smoke tests."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig, ALL_SHAPES, shapes_for

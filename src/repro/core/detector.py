@@ -16,7 +16,7 @@ PerfTracker wraps exactly two anchors — ``dataloader.next()`` and
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Deque, List, Optional, Tuple
 
 DATALOADER_NEXT = "dataloader.next"
@@ -30,6 +30,16 @@ class Trigger:
     mean_duration: float
     baseline: float
     detail: str = ""
+
+
+@dataclass(frozen=True)
+class Recovery:
+    """Emitted when a degradation the detector triggered on clears: the
+    slowdown re-arm fires (recent mean back under threshold) or a blockage
+    stall ends (anchor events flow again).  This is the signal the online
+    incident pipeline resolves incidents on (DESIGN.md §7)."""
+    reason: str               # 'slowdown' | 'blockage'
+    time: float
 
 
 @dataclass
@@ -49,8 +59,11 @@ class DetectorConfig:
 class IterationDetector:
     """Online automaton over (event_name, timestamp) pairs."""
 
-    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[DetectorConfig] = None):
+        # None -> fresh config: a dataclass default would be one shared
+        # module-level instance aliased across every detector
+        self.cfg = cfg if cfg is not None else DetectorConfig()
+        cfg = self.cfg
         self.phase = "detect"                 # detect -> monitor
         self.sequence: Optional[Tuple[str, ...]] = None
         self._events: Deque[Tuple[str, float]] = deque(maxlen=4096)
@@ -61,6 +74,7 @@ class IterationDetector:
         self.durations: Deque[float] = deque(
             maxlen=cfg.history_iters)
         self.triggers: List[Trigger] = []
+        self.recoveries: List[Recovery] = []
         # re-arm state: a degradation fires ONE trigger, then stays silent
         # until the metric recovers (or, for slowdown, a cooldown elapses)
         self._slowdown_armed = True
@@ -119,6 +133,8 @@ class IterationDetector:
         baseline = min(self.durations)
         if mean <= baseline * cfg.slowdown_ratio:
             # recovered: the next degradation is a new incident
+            if not self._slowdown_armed:
+                self.recoveries.append(Recovery("slowdown", t1))
             self._slowdown_armed = True
             self._iters_since_trigger = 0
             return None
@@ -141,7 +157,9 @@ class IterationDetector:
     def feed(self, name: str, t: float) -> Optional[Trigger]:
         """Feed one anchor event; returns a Trigger if degradation fired."""
         self._last_event_t = t
-        self._blockage_armed = True        # events flowing again: stall over
+        if not self._blockage_armed:       # events flowing again: stall over
+            self.recoveries.append(Recovery("blockage", t))
+        self._blockage_armed = True
         self._events.append((name, t))
         if self.phase == "detect":
             self._try_lock_sequence()
@@ -193,3 +211,9 @@ class IterationDetector:
     @property
     def locked(self) -> bool:
         return self.phase == "monitor"
+
+    @property
+    def healthy(self) -> bool:
+        """True when no triggered degradation is outstanding: every fired
+        trigger's re-arm condition has recovered (or nothing ever fired)."""
+        return self._slowdown_armed and self._blockage_armed

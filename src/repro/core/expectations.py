@@ -8,8 +8,7 @@ wider collective box for all_to_all/dispatch phases.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -2,8 +2,8 @@
 the paper diagnoses (§3, §6.1, §6.2)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
 
 @dataclass(frozen=True)

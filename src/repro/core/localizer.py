@@ -14,8 +14,8 @@ on one CPU core (benchmarks/localization_scaling.py reproduces Fig. 17c).
 from __future__ import annotations
 
 import zlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
 import numpy as np
 

@@ -3,8 +3,8 @@ abnormally, how they differ from expectation/peers, plus root-cause hints
 (the diagnosis rules the paper walks through in §3/§6)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 

@@ -20,7 +20,7 @@ Both modes produce byte-identical diagnoses (a tested invariant).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -28,7 +28,7 @@ import numpy as np
 from repro.core.detector import DetectorConfig, IterationDetector, Trigger
 from repro.core.daemon import PatternUpload, summarize_and_upload
 from repro.core.events import Kind, WorkerProfile
-from repro.core.localizer import Abnormality, Localizer
+from repro.core.localizer import Localizer
 from repro.core.report import Diagnosis, build_report, format_report
 from repro.summarize.aggregate import PatternAggregator
 from repro.summarize.fleet import summarize_fleet
@@ -54,10 +54,15 @@ class PerfTrackerService:
     """Global side of PerfTracker. ``family`` tunes expected-range boxes."""
 
     def __init__(self, family: str = "dense",
-                 detector_cfg: DetectorConfig = DetectorConfig(),
+                 detector_cfg: Optional[DetectorConfig] = None,
                  summarize_backend=None):
         self.family = family
-        self.detector = IterationDetector(detector_cfg)
+        # None -> a fresh DetectorConfig per service; an eagerly-evaluated
+        # default would be ONE module-level instance aliased across every
+        # PerfTrackerService (mutating one service's thresholds would
+        # silently retune all others)
+        self.detector = IterationDetector(
+            detector_cfg if detector_cfg is not None else DetectorConfig())
         self.localizer = Localizer(family=family)
         # name/instance/None — threaded into every per-worker summarization
         self.summarize_backend = summarize_backend

@@ -11,8 +11,7 @@ Two modes:
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -50,6 +49,8 @@ class FleetSimulator:
         self.cfg = cfg
         self.faults = list(faults)
         self.rng = np.random.default_rng(cfg.seed)
+        #: end of the last anchor_events span (continuous-timeline cursor)
+        self.anchor_clock = 0.0
 
     # -- helpers ----------------------------------------------------------
     def _fault(self, kind):
@@ -76,12 +77,15 @@ class FleetSimulator:
         return m
 
     # -- anchor event stream (feeds the §4.1 detector) --------------------
-    def anchor_events(self, n_iters: int, degrade_after: Optional[int] = None
-                      ) -> List[Tuple[str, float]]:
-        """(name, t) stream of dataloader.next / optimizer.step anchors.
-        Faults kick in after iteration ``degrade_after`` (None = from t=0)."""
+    def anchor_events(self, n_iters: int, degrade_after: Optional[int] = None,
+                      t0: float = 0.0) -> List[Tuple[str, float]]:
+        """(name, t) stream of dataloader.next / optimizer.step anchors
+        starting at ``t0``.  Faults kick in after iteration ``degrade_after``
+        (None = from the first iteration).  The end of the generated span is
+        left in ``self.anchor_clock`` so a scenario runner can chain calls
+        into one continuous timeline (fault sets may change between calls)."""
         out = []
-        t = 0.0
+        t = t0
         mult = self.iteration_multiplier()
         for i in range(n_iters):
             m = mult if degrade_after is None or i >= degrade_after else 1.0
@@ -90,29 +94,53 @@ class FleetSimulator:
             out.append(("dataloader.next", t))
             out.append(("optimizer.step", t + dur * 0.97))
             t += dur
+        self.anchor_clock = t
         return out
 
     # -- raw profiling window ---------------------------------------------
-    def profile_window(self) -> List[WorkerProfile]:
+    def profile_window(self, rates: Optional[Sequence[float]] = None,
+                       seed: Optional[int] = None) -> List[WorkerProfile]:
+        """One fleet of raw profiling windows.
+
+        ``rates`` (per-worker sample rates in Hz, length W) is the
+        differential-escalation knob (DESIGN.md §7): workers may be sampled
+        at different rates, and ``summarize_fleet``'s rate grouping batches
+        them without re-padding.  ``seed`` varies the per-worker noise
+        draw window to window (None keeps the config seed — byte-identical
+        to the historical single-window behavior)."""
         cfg = self.cfg
+        if rates is not None:
+            rates = np.asarray(rates, np.float64)
+            if rates.shape != (cfg.n_workers,):
+                raise ValueError(
+                    f"rates must have shape ({cfg.n_workers},), "
+                    f"got {rates.shape}")
         profiles = []
-        gc_fault = self._fault(F.AsyncGc)
         ring_fault = self._fault(F.RingSlowLink)
-        ring_traces = None
+        ring_by_rate: Dict[float, np.ndarray] = {}
         if ring_fault:
             rf = ring_fault[0]
-            ring_traces = ring_utilization(
-                RingConfig(n_workers=cfg.n_workers), cfg.window_s,
-                cfg.rate_hz, slow_worker=rf.slow_worker, rho=rf.rho,
-                rng=self.rng)
+            distinct = [cfg.rate_hz] if rates is None else \
+                sorted({float(r) for r in rates})
+            for r in distinct:
+                ring_by_rate[r] = ring_utilization(
+                    RingConfig(n_workers=cfg.n_workers), cfg.window_s,
+                    r, slow_worker=rf.slow_worker, rho=rf.rho,
+                    rng=self.rng)
         for w in range(cfg.n_workers):
-            profiles.append(self._worker_profile(w, ring_traces))
+            r = cfg.rate_hz if rates is None else float(rates[w])
+            profiles.append(self._worker_profile(
+                w, ring_by_rate.get(r), rate_hz=r, seed=seed))
         return profiles
 
-    def _worker_profile(self, w: int, ring_traces) -> WorkerProfile:
+    def _worker_profile(self, w: int, ring_traces,
+                        rate_hz: Optional[float] = None,
+                        seed: Optional[int] = None) -> WorkerProfile:
         cfg = self.cfg
-        rng = np.random.default_rng((cfg.seed, w))
-        n = int(cfg.window_s * cfg.rate_hz)
+        rate = cfg.rate_hz if rate_hz is None else float(rate_hz)
+        rng = np.random.default_rng(
+            (cfg.seed if seed is None else seed, w))
+        n = int(cfg.window_s * rate)
         streams = {
             "gpu_sm": np.zeros(n),
             "cpu": np.zeros(n),
@@ -135,7 +163,7 @@ class FleetSimulator:
 
         def paint(stream: str, t0: float, t1: float, level: float,
                   jitter: float = 0.03):
-            i0, i1 = int(t0 * cfg.rate_hz), int(t1 * cfg.rate_hz)
+            i0, i1 = int(t0 * rate), int(t1 * rate)
             i0, i1 = max(0, i0), min(n, i1)
             if i1 > i0:
                 streams[stream][i0:i1] = np.clip(
@@ -184,8 +212,7 @@ class FleetSimulator:
                 cd *= 1.0 / self._fault(F.RingSlowLink)[0].rho * 0.8
             events.append(FunctionEvent(ALLGATHER, Kind.COMM, t, t + cd, w))
             if ring_traces is not None:
-                i0, i1 = int(t * cfg.rate_hz), min(n, int((t + cd)
-                                                          * cfg.rate_hz))
+                i0, i1 = int(t * rate), min(n, int((t + cd) * rate))
                 seg = ring_traces[w][i0:i1]
                 streams["pcie_tx"][i0:i0 + len(seg)] = seg
             else:
@@ -210,7 +237,7 @@ class FleetSimulator:
         return WorkerProfile(
             worker=w, window=(t0, self.cfg.window_s),
             events=[e for e in events if e.start < self.cfg.window_s],
-            streams={k: SampleStream(cfg.rate_hz, 0.0, v)
+            streams={k: SampleStream(rate, 0.0, v)
                      for k, v in streams.items()})
 
     # -- pattern mode (scaling benchmarks) ---------------------------------

@@ -14,7 +14,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 

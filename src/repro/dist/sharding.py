@@ -15,7 +15,7 @@ anything indivisible is replicated rather than rejected.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax

@@ -12,7 +12,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
-from repro.core.detector import DetectorConfig, IterationDetector, Trigger
+from repro.core.detector import DetectorConfig, Trigger
 from repro.core.events import Kind
 from repro.core.service import DiagnosisResult, PerfTrackerService
 from repro.instrument.tracer import Tracer

@@ -16,8 +16,7 @@ from __future__ import annotations
 import threading
 import time
 from contextlib import contextmanager
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -83,13 +82,28 @@ class Tracer:
     ``REPRO_SUMMARIZE_BACKEND`` env var).
     """
 
-    def __init__(self, worker: int = 0, pack: bool = True):
+    def __init__(self, worker: int = 0, pack: bool = True,
+                 rate_hz: float = 500.0):
         self.worker = worker
         self.pack = pack
         self.events: List[FunctionEvent] = []
         self.active = False
         self._window_start = 0.0
-        self.sampler = HostSampler()
+        self.sampler = HostSampler(rate_hz=rate_hz)
+
+    @property
+    def rate_hz(self) -> float:
+        return self.sampler.rate_hz
+
+    def set_rate(self, rate_hz: float) -> None:
+        """Differential escalation (DESIGN.md §7): the service retunes each
+        worker's sampling rate between profiling windows — implicated
+        workers run at the full rate, the rest at the cheap base rate.
+        Takes effect at the next ``start_window`` (the sampler thread reads
+        its rate once at start)."""
+        if self.active:
+            raise RuntimeError("cannot retune rate_hz mid-window")
+        self.sampler.rate_hz = float(rate_hz)
 
     def start_window(self):
         self.events = []

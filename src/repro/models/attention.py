@@ -10,7 +10,6 @@ path and the numerical oracle.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ supplies precomputed patch/frame embeddings.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

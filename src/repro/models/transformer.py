@@ -6,8 +6,7 @@ optional ``dist`` context (sharding constraints + MoE shard_map).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,19 @@
+"""Online incident pipeline (DESIGN.md §7): continuous detection,
+cross-window EMA aggregation, incident lifecycles, and differential
+escalation over the fleet-batched diagnosis path."""
+from repro.online.ema import EmaPatternAggregator
+from repro.online.escalation import EscalationPolicy
+from repro.online.incident import (CONFIRMED, MITIGATING, OPEN, RESOLVED,
+                                   Incident, IncidentManager)
+from repro.online.pipeline import OnlinePipeline, WindowReport
+from repro.online.scenario import (ScenarioResult, ScenarioRunner,
+                                   ScheduledFault, default_detector_cfg)
+
+__all__ = [
+    "EmaPatternAggregator", "EscalationPolicy",
+    "OPEN", "CONFIRMED", "MITIGATING", "RESOLVED",
+    "Incident", "IncidentManager",
+    "OnlinePipeline", "WindowReport",
+    "ScenarioResult", "ScenarioRunner", "ScheduledFault",
+    "default_detector_cfg",
+]

@@ -1,0 +1,205 @@
+"""Incident lifecycle for the online pipeline (DESIGN.md §7).
+
+An *incident* is one performance problem with a lifecycle:
+
+    open ──▶ confirmed ──▶ mitigating ──▶ resolved
+
+  * ``open``       — the detector fired a Trigger (anchor-level degradation)
+    but localization has not yet named a culprit function;
+  * ``confirmed``  — a profiling window's localization produced an
+    ``Abnormality`` matching this incident (the incident's identity is its
+    abnormal *function*, which is what keeps overlapping faults distinct);
+  * ``mitigating`` — the abnormality persisted into a further window and a
+    mitigation plan (``repro.core.mitigation``) is attached;
+  * ``resolved``   — the detector's recovery re-arm fired
+    (``IterationDetector.recoveries``) while the signature is clear, or the
+    signature stayed clear for ``clear_windows`` consecutive windows (the
+    fallback for overlapping incidents, where the job-level iteration time
+    only recovers when the LAST fault clears).
+
+One detector trigger never spawns more than one incident — reminder
+triggers (``rearm_cooldown``) and additional abnormal functions fold into
+the open incident set instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.detector import Recovery, Trigger
+from repro.core.localizer import Abnormality
+from repro.core.mitigation import MitigationPlan, plan_mitigations
+from repro.core.report import Diagnosis
+
+OPEN = "open"
+CONFIRMED = "confirmed"
+MITIGATING = "mitigating"
+RESOLVED = "resolved"
+
+#: lifecycle order, for monotonicity checks in tests
+STATES = (OPEN, CONFIRMED, MITIGATING, RESOLVED)
+
+
+@dataclass
+class Incident:
+    id: int
+    opened_at: float
+    trigger: Optional[Trigger]
+    state: str = OPEN
+    function: str = ""                  # set at confirmation
+    kind: Optional[object] = None
+    workers: Tuple[int, ...] = ()       # last implicated worker set
+    confirmed_at: Optional[float] = None
+    resolved_at: Optional[float] = None
+    plans: List[MitigationPlan] = field(default_factory=list)
+    #: consecutive windows whose localization did NOT reproduce the
+    #: signature (reset on every hit)
+    windows_clear: int = 0
+    #: (time, state) transition log
+    history: List[Tuple[float, str]] = field(default_factory=list)
+
+    def _transition(self, state: str, t: float) -> None:
+        self.state = state
+        self.history.append((t, state))
+
+    @property
+    def active(self) -> bool:
+        return self.state != RESOLVED
+
+
+class IncidentManager:
+    """Folds detector triggers/recoveries and per-window localizations into
+    a set of distinct incidents."""
+
+    def __init__(self, fleet_size: int, clear_windows: int = 2,
+                 confirm_windows: int = 2):
+        self.fleet_size = fleet_size
+        self.clear_windows = clear_windows
+        #: consecutive abnormal windows a TRIGGER-LESS abnormality needs
+        #: before it becomes its own incident.  An abnormality matching a
+        #: pending trigger confirms immediately (the job-level detector
+        #: corroborates it); without that corroboration one window could be
+        #: EMA residue draining after a mitigation, not a new fault.
+        self.confirm_windows = confirm_windows
+        self.incidents: List[Incident] = []
+        self._candidates: Dict[str, int] = {}
+        self._next_id = 0
+
+    # -- views -------------------------------------------------------------
+    @property
+    def active(self) -> List[Incident]:
+        return [i for i in self.incidents if i.active]
+
+    def by_function(self, function: str) -> Optional[Incident]:
+        for inc in self.incidents:
+            if inc.active and inc.function == function:
+                return inc
+        return None
+
+    def _pending(self) -> Optional[Incident]:
+        """The unconfirmed OPEN incident holding the latest trigger."""
+        for inc in self.incidents:
+            if inc.active and inc.state == OPEN:
+                return inc
+        return None
+
+    # -- detector events ----------------------------------------------------
+    def on_trigger(self, trig: Trigger) -> Optional[Incident]:
+        """A detector trigger opens at most one incident: while ANY incident
+        is active the trigger is a reminder of the ongoing degradation, not
+        a new problem (the detector is job-level and cannot tell two
+        concurrent faults apart — localization can, and does, below)."""
+        if self.active:
+            return None
+        inc = Incident(id=self._next_id, opened_at=trig.time, trigger=trig)
+        inc.history.append((trig.time, OPEN))
+        self._next_id += 1
+        self.incidents.append(inc)
+        return inc
+
+    def on_recovery(self, rec: Recovery) -> List[Incident]:
+        """Detector recovery re-arm: the job-level metric is healthy again.
+        Every active incident whose signature is currently clear resolves;
+        an unconfirmed OPEN incident (trigger never localized) resolves as
+        transient."""
+        resolved = []
+        for inc in self.active:
+            if inc.state == OPEN or inc.windows_clear >= 1:
+                inc.resolved_at = rec.time
+                inc._transition(RESOLVED, rec.time)
+                resolved.append(inc)
+        return resolved
+
+    # -- per-window localization -------------------------------------------
+    def on_window(self, t: float, diagnoses: Sequence[Diagnosis],
+                  detector_healthy: bool = False) -> List[Incident]:
+        """Fold one profiling window's diagnoses in; returns incidents that
+        changed state this window.
+
+        ``detector_healthy`` relaxes resolution to a single clear window:
+        when the job-level metric has already recovered, a clean
+        localization is confirmation, not coincidence."""
+        changed: List[Incident] = []
+        hit: Dict[int, bool] = {}
+        seen_fns = set()
+        for d in diagnoses:
+            a: Abnormality = d.abnormality
+            seen_fns.add(a.function)
+            inc = self.by_function(a.function)
+            if inc is None:
+                pending = self._pending()
+                if pending is not None:
+                    inc = pending          # the trigger's culprit, found
+                else:
+                    # a second fault surfacing while another incident holds
+                    # the trigger: distinct function -> distinct incident,
+                    # but only after it persists (hysteresis against EMA
+                    # residue flapping one window after a mitigation)
+                    streak = self._candidates.get(a.function, 0) + 1
+                    self._candidates[a.function] = streak
+                    if streak < self.confirm_windows:
+                        continue
+                    inc = Incident(id=self._next_id, opened_at=t,
+                                   trigger=None)
+                    inc.history.append((t, OPEN))
+                    self._next_id += 1
+                    self.incidents.append(inc)
+                self._candidates.pop(a.function, None)
+                inc.function = a.function
+                inc.kind = a.kind
+            inc.workers = tuple(int(w) for w in a.workers)
+            inc.windows_clear = 0
+            hit[inc.id] = True
+            if inc.state == OPEN:
+                inc.confirmed_at = t
+                inc._transition(CONFIRMED, t)
+                changed.append(inc)
+            elif inc.state == CONFIRMED:
+                inc.plans = plan_mitigations([d], self.fleet_size)
+                inc._transition(MITIGATING, t)
+                changed.append(inc)
+        # candidate streaks break the first window their function is clean
+        self._candidates = {f: c for f, c in self._candidates.items()
+                            if f in seen_fns}
+        need_clear = 1 if detector_healthy else self.clear_windows
+        for inc in self.active:
+            if hit.get(inc.id) or inc.state == OPEN:
+                continue
+            inc.windows_clear += 1
+            if inc.windows_clear >= need_clear:
+                inc.resolved_at = t
+                inc._transition(RESOLVED, t)
+                changed.append(inc)
+        return changed
+
+    # -- reporting ----------------------------------------------------------
+    def timeline(self) -> str:
+        lines = []
+        for inc in self.incidents:
+            head = (f"incident #{inc.id} [{inc.state}] "
+                    f"{inc.function or '<unlocalized>'} "
+                    f"workers={list(inc.workers)}")
+            lines.append(head)
+            for t, st in inc.history:
+                lines.append(f"    t={t:9.2f}s  -> {st}")
+        return "\n".join(lines) if lines else "no incidents"

@@ -1,0 +1,145 @@
+"""The steady-state loop of PerfTracker (DESIGN.md §7) — EROICA's *online*
+claim, made concrete:
+
+  anchors stream into the ``IterationDetector`` continuously; a ``Trigger``
+  opens an Incident; every profiling-window tick runs the fleet-batched
+  summarize path, folds the window's ``(W, F, 3)`` pattern block into the
+  cross-window EMA (``repro.online.ema``), localizes on the *smoothed*
+  patterns, advances incident lifecycles, and retunes per-worker sample
+  rates via differential escalation (``repro.online.escalation``).
+
+The one-shot ``PerfTrackerService.diagnose_profiles`` remains the batch
+entry point; ``OnlinePipeline`` wraps the same detector/localizer/backend
+components into the continuous loop the paper ran for 1.5 years.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.detector import DetectorConfig, Trigger
+from repro.core.localizer import Abnormality
+from repro.core.report import Diagnosis, build_report, format_report
+from repro.core.service import PerfTrackerService
+from repro.online.ema import EmaPatternAggregator
+from repro.online.escalation import EscalationPolicy
+from repro.online.incident import Incident, IncidentManager
+from repro.summarize.fleet import summarize_fleet
+
+
+@dataclass
+class WindowReport:
+    """Everything one profiling-window tick produced."""
+    index: int
+    t: float                       # scenario/deployment clock at tick
+    diagnoses: List[Diagnosis]
+    changed: List[Incident]        # incidents that transitioned this window
+    escalated: List[int]           # workers escalated for the NEXT window
+    rates: Optional[np.ndarray]    # per-worker rates USED for this window
+    raw_bytes: int
+    pattern_bytes: int
+    summarize_s: float
+    localize_s: float
+
+    def functions(self) -> List[str]:
+        return [d.abnormality.function for d in self.diagnoses]
+
+    def report(self, fleet_size: int) -> str:
+        return format_report(self.diagnoses, fleet_size)
+
+
+class OnlinePipeline:
+    """Continuous detection -> profiling -> localization -> incident loop."""
+
+    def __init__(self, n_workers: int, family: str = "dense",
+                 detector_cfg: Optional[DetectorConfig] = None,
+                 summarize_backend=None, alpha: float = 0.6,
+                 escalation: Optional[EscalationPolicy] = None,
+                 clear_windows: int = 2):
+        self.n_workers = int(n_workers)
+        self.service = PerfTrackerService(
+            family=family, detector_cfg=detector_cfg,
+            summarize_backend=summarize_backend)
+        self.detector = self.service.detector
+        self.ema = EmaPatternAggregator(self.n_workers, alpha=alpha)
+        self.incidents = IncidentManager(self.n_workers,
+                                         clear_windows=clear_windows)
+        self.escalation = escalation
+        self.windows: List[WindowReport] = []
+        self._recoveries_seen = 0
+
+    # -- detection side (runs between profiling windows) -------------------
+    def feed_anchors(self, events: Sequence[Tuple[str, float]]
+                     ) -> List[Trigger]:
+        """Stream anchor events; every trigger is folded into the incident
+        set (at most one new incident — reminders attach to the active
+        one), every detector recovery resolves what it can."""
+        triggers = []
+        for name, t in events:
+            trig = self.detector.feed(name, t)
+            if trig is not None:
+                triggers.append(trig)
+                self.incidents.on_trigger(trig)
+            self._drain_recoveries()
+        return triggers
+
+    def poll_blockage(self, now: float) -> Optional[Trigger]:
+        trig = self.detector.check_blockage(now)
+        if trig is not None:
+            self.incidents.on_trigger(trig)
+        return trig
+
+    def _drain_recoveries(self) -> None:
+        recs = self.detector.recoveries
+        if len(recs) > self._recoveries_seen:
+            for rec in recs[self._recoveries_seen:]:
+                self.incidents.on_recovery(rec)
+            self._recoveries_seen = len(recs)
+            # the job-level metric is healthy again: drain the EMA so stale
+            # fault evidence stops implicating already-mitigated workers
+            # (a recovery only fires when EVERY fault has cleared, so no
+            # concurrent incident loses live evidence)
+            self.ema = EmaPatternAggregator(self.n_workers,
+                                            alpha=self.ema.alpha)
+
+    # -- profiling side -----------------------------------------------------
+    def rates(self) -> Optional[np.ndarray]:
+        """Per-worker sample rates for the next window (None = no
+        escalation policy installed; profile at whatever the deployment's
+        fixed rate is)."""
+        return self.escalation.rates() if self.escalation else None
+
+    def window_tick(self, profiles, t: Optional[float] = None,
+                    rates: Optional[np.ndarray] = None) -> WindowReport:
+        """Fold one fleet of raw profiling windows into the online state."""
+        if t is None:
+            t = float(len(self.windows))
+        t0 = time.perf_counter()
+        fs = summarize_fleet(profiles,
+                             backend=self.service.summarize_backend)
+        self.ema.fold(fs.agg)
+        pats, kinds = self.ema.finalize()
+        summarize_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        abn: List[Abnormality] = self.service.localizer.localize(pats, kinds)
+        diagnoses = build_report(abn, self.n_workers)
+        localize_s = time.perf_counter() - t1
+        changed = self.incidents.on_window(
+            t, diagnoses, detector_healthy=self.detector.healthy)
+        escalated = (self.escalation.observe(abn)
+                     if self.escalation else [])
+        report = WindowReport(
+            index=len(self.windows), t=t, diagnoses=diagnoses,
+            changed=changed, escalated=escalated, rates=rates,
+            raw_bytes=sum(p.raw_size_bytes() for p in profiles),
+            pattern_bytes=fs.pattern_bytes,
+            summarize_s=summarize_s, localize_s=localize_s)
+        self.windows.append(report)
+        return report
+
+    # -- reporting ----------------------------------------------------------
+    def timeline(self) -> str:
+        return self.incidents.timeline()

@@ -1,0 +1,130 @@
+"""Multi-window scenario runner: drives the ``OnlinePipeline`` over a
+simulated training run with faults injected and removed mid-run
+(DESIGN.md §7).
+
+A scenario is a fault *schedule* over profiling windows: each
+``ScheduledFault`` is active for windows ``[start_window, end_window)``.
+Every window the runner
+
+  1. sets the simulator's active fault set from the schedule (the anchor
+     stream's iteration durations and the profiling window's resource
+     signatures both follow);
+  2. streams ``iters_per_window`` anchors into the pipeline's detector
+     (continuous timeline across windows via ``FleetSimulator.anchor_clock``);
+  3. asks the escalation policy for per-worker rates and materializes the
+     fleet's raw profiling windows at those rates;
+  4. ticks the pipeline (fleet-batched summarize -> EMA fold -> localize ->
+     incident transitions -> next escalation decision).
+
+Overlapping schedules exercise the distinct-incident path: the detector
+only fires once at job level, but each fault's abnormal *function* gets its
+own incident.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import faults as F
+from repro.core.detector import DetectorConfig
+from repro.core.simulation import FleetSimulator, SimConfig
+from repro.online.escalation import EscalationPolicy
+from repro.online.pipeline import OnlinePipeline, WindowReport
+
+
+@dataclass(frozen=True)
+class ScheduledFault:
+    fault: F.Fault
+    start_window: int
+    end_window: int                 # exclusive
+
+    def active(self, window: int) -> bool:
+        return self.start_window <= window < self.end_window
+
+
+@dataclass
+class ScenarioResult:
+    pipeline: OnlinePipeline
+    reports: List[WindowReport]
+    spans: List[Tuple[float, float]]   # (t_start, t_end) per window
+
+    def window_of(self, t: float) -> int:
+        """Map a timeline instant (e.g. an incident transition time) to the
+        profiling window it fell in.  Window ticks run at exactly the span
+        end, so the upper boundary is inclusive."""
+        for i, (t0, t1) in enumerate(self.spans):
+            if t <= t1:
+                return i
+        return len(self.spans) - 1
+
+    @property
+    def incidents(self):
+        return self.pipeline.incidents.incidents
+
+    def timeline(self) -> str:
+        return self.pipeline.timeline()
+
+
+def default_detector_cfg(iters_per_window: int) -> DetectorConfig:
+    """Windows-scale detector thresholds: lock fast, judge the slowdown
+    over roughly half a window of iterations so both the trigger and the
+    recovery re-arm land within a window or two of the fault edge.
+
+    ``history_iters`` bounds the 'recent shortest' baseline: once a fault
+    outlives the whole history, the pre-fault minimum ages out, the
+    baseline drifts up to the degraded level, and the detector emits a
+    spurious Recovery mid-fault (draining the pipeline's EMA).  50 windows
+    of headroom keeps that horizon far beyond any scheduled scenario while
+    still letting a production baseline drift eventually."""
+    n_recent = max(5, min(20, iters_per_window // 2))
+    return DetectorConfig(m_identical=5, n_recent=n_recent,
+                          history_iters=50 * iters_per_window,
+                          rearm_cooldown=0)
+
+
+class ScenarioRunner:
+    def __init__(self, sim_cfg: SimConfig,
+                 schedule: Sequence[ScheduledFault],
+                 n_windows: int = 8, iters_per_window: int = 24,
+                 escalation: Optional[EscalationPolicy] = None,
+                 detector_cfg: Optional[DetectorConfig] = None,
+                 summarize_backend="numpy", alpha: float = 0.6,
+                 clear_windows: int = 2):
+        self.sim_cfg = sim_cfg
+        self.schedule = list(schedule)
+        self.n_windows = n_windows
+        self.iters_per_window = iters_per_window
+        self.sim = FleetSimulator(sim_cfg, [])
+        self.pipeline = OnlinePipeline(
+            n_workers=sim_cfg.n_workers, family=sim_cfg.family,
+            detector_cfg=(detector_cfg if detector_cfg is not None
+                          else default_detector_cfg(iters_per_window)),
+            summarize_backend=summarize_backend, alpha=alpha,
+            escalation=escalation, clear_windows=clear_windows)
+
+    def faults_at(self, window: int) -> List[F.Fault]:
+        return [sf.fault for sf in self.schedule if sf.active(window)]
+
+    def run(self, verbose: bool = False) -> ScenarioResult:
+        reports: List[WindowReport] = []
+        spans: List[Tuple[float, float]] = []
+        for i in range(self.n_windows):
+            self.sim.faults = self.faults_at(i)
+            t0 = self.sim.anchor_clock
+            anchors = self.sim.anchor_events(self.iters_per_window, t0=t0)
+            self.pipeline.feed_anchors(anchors)
+            self.pipeline.poll_blockage(self.sim.anchor_clock)
+            rates = self.pipeline.rates()
+            profiles = self.sim.profile_window(
+                rates=rates, seed=self.sim_cfg.seed + 7919 * (i + 1))
+            report = self.pipeline.window_tick(
+                profiles, t=self.sim.anchor_clock, rates=rates)
+            spans.append((t0, self.sim.anchor_clock))
+            reports.append(report)
+            if verbose:
+                print(f"-- window {i} (t={report.t:.1f}s, "
+                      f"faults={[type(f).__name__ for f in self.sim.faults]},"
+                      f" escalated={report.escalated})")
+                print(report.report(self.sim_cfg.n_workers))
+        return ScenarioResult(pipeline=self.pipeline, reports=reports,
+                              spans=spans)

@@ -7,7 +7,6 @@ exactly like its parameter).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Dict, Tuple
 

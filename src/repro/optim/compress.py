@@ -15,8 +15,7 @@ compressed — the hierarchical schedule from DESIGN.md §7.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -3,9 +3,8 @@ caches, temperature sampling, and PerfTracker serve-mode anchors
 (request.dequeue / decode.step play the roles of the two anchors)."""
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

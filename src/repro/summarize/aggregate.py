@@ -121,6 +121,10 @@ class PatternAggregator:
         return (self._buf[:self._n_workers, :len(self._names)],
                 list(self._names))
 
+    def kinds(self) -> Dict[str, Kind]:
+        """First-seen kind per interned function (copy)."""
+        return dict(self._kinds)
+
     def finalize(self, sort_names: bool = True
                  ) -> Tuple[Dict[str, np.ndarray], Dict[str, Kind]]:
         """Localizer-shaped result: {name: (W, 3) zero-copy view}, kinds.

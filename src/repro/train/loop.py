@@ -4,13 +4,11 @@ mitigation hooks (localizer output -> checkpoint-now + re-mesh).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.ckpt.checkpoint import Checkpointer

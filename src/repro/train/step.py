@@ -2,7 +2,6 @@
 the train loop executes)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

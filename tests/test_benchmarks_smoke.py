@@ -1,0 +1,101 @@
+"""ISSUE 3 satellite: every module wired into ``benchmarks/run.py`` must
+import and run at minimum (env-shrunk) size under tier-1, so a broken
+benchmark fails ``make test`` locally instead of only surfacing in the CI
+bench job.
+"""
+import importlib
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: minimum-size knobs per module (see each module's docstring)
+SHRINK = {
+    "REPRO_BENCH_FLEET_SIZES": "4",
+    "REPRO_BENCH_LOC_SIZES": "200",
+    "REPRO_BENCH_SUMMARIZE_GRID": "16x64",
+    "REPRO_BENCH_OVERHEAD_CONFIGS": "granite-34b:32:1",
+    "REPRO_BENCH_OVERHEAD_STEPS": "4",
+    "REPRO_BENCH_RING_TRIALS": "2",
+    "REPRO_BENCH_ONLINE_W": "8",
+    "REPRO_BENCH_ONLINE_WINDOWS": "6",
+    "REPRO_BENCH_ONLINE_CASES": "C1P1_gpu_throttle",
+}
+
+
+def _modules():
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.run import MODULES
+    finally:
+        sys.path.pop(0)
+    return [name for name, _ in MODULES]
+
+
+@pytest.mark.parametrize("name", _modules())
+def test_benchmark_module_runs_at_min_size(name, monkeypatch):
+    monkeypatch.syspath_prepend(str(REPO))
+    for k, v in SHRINK.items():
+        monkeypatch.setenv(k, v)
+    # env knobs are read at import time: (re-)import fresh under the shrink
+    for key in [k for k in sys.modules if k == f"benchmarks.{name}"]:
+        del sys.modules[key]
+    mod = importlib.import_module(f"benchmarks.{name}")
+    rows = mod.run()
+    assert rows, f"benchmarks/{name}.py returned no rows"
+    for row in rows:
+        n, v, d = row                       # the run.py row contract
+        assert isinstance(n, str) and n
+        float(v)                            # must be numeric (may be 0)
+        str(d)
+
+
+def test_run_py_json_and_metrics(tmp_path, monkeypatch):
+    """The --json path and metric extraction the CI gate depends on."""
+    monkeypatch.syspath_prepend(str(REPO))
+    from benchmarks.run import metrics_from_rows
+    rows = [("bench[fleet]_W8", 123.4, "2.5x_vs_wire;identical=Y"),
+            ("bench/ratio", 5.7, "ratio=5.75x;accuracy=Y;note=free text"),
+            ("plain", 1.0, "")]
+    m = metrics_from_rows(rows)
+    assert m["bench[fleet]_W8:speedup_vs_wire"] == 2.5
+    assert m["bench[fleet]_W8:identical"] == "Y"
+    assert m["bench/ratio:ratio"] == 5.75
+    assert m["bench/ratio:accuracy"] == "Y"
+    assert m["plain:us_per_call"] == 1.0
+
+
+def test_check_regression_gate(tmp_path, monkeypatch):
+    monkeypatch.syspath_prepend(str(REPO))
+    import json
+    import subprocess
+    results = {"metrics": {"m:speedup": 2.0, "m:flag": "Y"}, "failures": 0}
+    baselines = {"default_tolerance": 0.3, "metrics": {
+        "m:speedup": {"value": 2.0, "direction": "higher"},
+        "m:flag": {"equals": "Y"},
+    }}
+    rpath, bpath = tmp_path / "r.json", tmp_path / "b.json"
+    rpath.write_text(json.dumps(results))
+    bpath.write_text(json.dumps(baselines))
+    script = str(REPO / "benchmarks" / "check_regression.py")
+
+    def gate(res):
+        rpath.write_text(json.dumps(res))
+        return subprocess.run(
+            [sys.executable, script, str(rpath), "--baselines", str(bpath),
+             "--require-all"], capture_output=True, text=True).returncode
+
+    assert gate(results) == 0
+    # regression beyond tolerance fails
+    assert gate({"metrics": {"m:speedup": 1.0, "m:flag": "Y"},
+                 "failures": 0}) == 1
+    # parity flag flip fails
+    assert gate({"metrics": {"m:speedup": 2.0, "m:flag": "N"},
+                 "failures": 0}) == 1
+    # missing metric fails under --require-all
+    assert gate({"metrics": {"m:speedup": 2.0}, "failures": 0}) == 1
+    # errored benchmark module fails the gate
+    assert gate({"metrics": {"m:speedup": 2.0, "m:flag": "Y"},
+                 "failures": 1}) == 1

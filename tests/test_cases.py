@@ -1,14 +1,10 @@
 """End-to-end reproduction of the paper's production cases (§3, §6) through
 detector -> profiling -> patterns -> localization -> mitigation."""
-import numpy as np
-import pytest
 
 from repro.core import faults as F
 from repro.core.mitigation import Action, plan_mitigations
 from repro.core.service import PerfTrackerService
-from repro.core.simulation import (ALLGATHER, DATALOADER_STACK,
-                                   FORWARD_STACK, GC_STACK, GEMM,
-                                   FleetSimulator, SimConfig)
+from repro.core.simulation import ALLGATHER, GEMM, FleetSimulator, SimConfig
 
 
 def run_case(faults, n_workers=32, family="dense", seed=7):

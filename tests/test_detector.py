@@ -1,5 +1,4 @@
 """§4.1 iteration/degradation detection."""
-import pytest
 
 from repro.core.detector import DetectorConfig, IterationDetector
 

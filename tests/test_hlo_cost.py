@@ -1,8 +1,5 @@
 """Trip-count-expanded HLO cost parser: verified against analytically known
 programs (the measurement instrument for §Roofline must itself be tested)."""
-import subprocess
-import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp

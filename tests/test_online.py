@@ -1,0 +1,381 @@
+"""ISSUE 3: online multi-window incident pipeline (DESIGN.md §7).
+
+The scenario matrix drives every fault model through a multi-window
+simulated run with mid-run injection and removal, asserting the paper's
+online story end-to-end: the incident opens within 2 windows of injection,
+names the faulty worker(s), and resolves within 2 windows of removal —
+with the fleet profiled at the cheap base rate and only implicated workers
+escalated to the full rate.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core.detector import (DetectorConfig, IterationDetector, Recovery)
+from repro.core.events import Kind
+from repro.core.localizer import Abnormality
+from repro.core.service import PerfTrackerService
+from repro.core.simulation import (ALLGATHER, DATALOADER_STACK, FORWARD_STACK,
+                                   GC_STACK, GEMM, FleetSimulator, SimConfig)
+from repro.online import (CONFIRMED, MITIGATING, OPEN, RESOLVED,
+                          EmaPatternAggregator, EscalationPolicy,
+                          IncidentManager, ScenarioRunner, ScheduledFault)
+from repro.summarize.aggregate import PatternAggregator
+
+W = 24
+INJECT, REMOVE = 2, 6
+BASE_HZ, FULL_HZ = 250.0, 2000.0
+
+#: (fault, expected incident function, culprit workers or None=fleet-wide)
+SCENARIOS = [
+    pytest.param(F.GpuThrottle(workers=(3, 11)), GEMM, {3, 11},
+                 id="C1P1_gpu_throttle"),
+    pytest.param(F.NvlinkDown(workers=[5], group_size=8), ALLGATHER, {5},
+                 id="C1P2_nvlink_down"),
+    pytest.param(F.RingSlowLink(slow_worker=9, rho=0.4), ALLGATHER, {9},
+                 id="S3_ring_slow_link"),
+    pytest.param(F.SlowDataloader(), DATALOADER_STACK, None,
+                 id="C2P1_slow_dataloader"),
+    pytest.param(F.CpuBoundForward(workers=range(6)), FORWARD_STACK,
+                 set(range(6)), id="C2P2_cpu_forward"),
+    pytest.param(F.AsyncGc(probability=0.5, pause_s=0.25), GC_STACK, None,
+                 id="C2P3_async_gc"),
+]
+
+
+def run_scenario(schedule, n_windows=10, seed=5, escalation=True):
+    esc = EscalationPolicy(n_workers=W, base_rate_hz=BASE_HZ,
+                           full_rate_hz=FULL_HZ) if escalation else None
+    return ScenarioRunner(
+        SimConfig(n_workers=W, window_s=1.0, rate_hz=FULL_HZ, seed=seed),
+        schedule, n_windows=n_windows, escalation=esc).run()
+
+
+# -- the multi-window fault matrix -------------------------------------------
+
+@pytest.mark.parametrize("fault,expect,culprits", SCENARIOS)
+def test_scenario_lifecycle(fault, expect, culprits):
+    res = run_scenario([ScheduledFault(fault, INJECT, REMOVE)])
+    incs = [i for i in res.incidents if i.function == expect]
+    assert incs, (expect, [i.function for i in res.incidents])
+    inc = incs[0]
+    # opens within 2 windows of injection (trigger is anchor-driven)
+    assert INJECT <= res.window_of(inc.opened_at) <= INJECT + 2
+    # names the faulty worker(s)
+    if culprits is not None:
+        assert culprits <= set(inc.workers), (culprits, inc.workers)
+    else:
+        assert len(inc.workers) > 0
+    # full lifecycle, in order
+    states = [s for _, s in inc.history]
+    assert states == [OPEN, CONFIRMED, MITIGATING, RESOLVED]
+    # resolves within 2 windows of fault removal
+    assert inc.state == RESOLVED
+    assert res.window_of(inc.resolved_at) <= REMOVE + 2
+    # a mitigation plan was attached while mitigating
+    assert inc.plans
+
+
+def test_scenario_healthy_run_no_incidents():
+    res = run_scenario([])
+    assert res.incidents == []
+    assert all(r.functions() == [] for r in res.reports)
+
+
+def test_scenario_escalates_implicated_workers_only():
+    res = run_scenario(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, REMOVE)])
+    # before the fault: nobody escalated, whole fleet at base rate
+    assert res.reports[0].escalated == []
+    np.testing.assert_allclose(res.reports[1].rates, BASE_HZ)
+    # during the fault: the culprits (and only a small set) run full rate
+    mid = res.reports[INJECT + 1]
+    assert {3, 11} <= set(mid.escalated)
+    assert len(mid.escalated) <= 4
+    assert mid.rates[3] == FULL_HZ and mid.rates[0] == BASE_HZ
+    # cooldown after resolution: escalation drains back to empty
+    assert res.reports[-1].escalated == []
+
+
+def test_scenario_overlapping_incidents_stay_distinct():
+    res = run_scenario(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), 2, 8),
+         ScheduledFault(F.SlowDataloader(), 4, 10)], n_windows=14)
+    gemm = next(i for i in res.incidents if i.function == GEMM)
+    dl = next(i for i in res.incidents if i.function == DATALOADER_STACK)
+    assert gemm.id != dl.id
+    # the second fault opened its own incident while the first was active
+    assert 4 <= res.window_of(dl.opened_at) <= 6
+    assert res.window_of(dl.opened_at) >= res.window_of(gemm.opened_at)
+    # both resolve, independently
+    assert gemm.state == RESOLVED and dl.state == RESOLVED
+    assert res.window_of(gemm.resolved_at) <= 8 + 2
+    assert res.window_of(dl.resolved_at) <= 10 + 2
+    # the throttled workers stayed attributed to the GPU incident
+    assert {3, 11} <= set(gemm.workers)
+
+
+def test_scenario_diagnoses_sharpen_not_restart():
+    """Cross-window EMA: consecutive windows of one incident keep the
+    diagnosis stable (same function, same culprits) instead of flapping."""
+    res = run_scenario(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, REMOVE)])
+    flagged = [GEMM in r.functions()
+               for r in res.reports[INJECT + 1:REMOVE]]
+    assert all(flagged)
+
+
+# -- EMA aggregator -----------------------------------------------------------
+
+def _window_agg(values):
+    """A (W=2, F, 3) one-window aggregator from {name: [w0row, w1row]}."""
+    agg = PatternAggregator(expected_workers=2)
+    agg.reserve_workers(2)
+    names = list(values)
+    for nm in names:
+        agg.intern(nm, Kind.GPU)
+    block = np.stack([np.asarray(values[nm], np.float32).reshape(2, 3)
+                      for nm in names], axis=1)
+    agg.scatter_block(0, block)
+    return agg
+
+
+def test_ema_first_window_initializes_full_value():
+    ema = EmaPatternAggregator(2, alpha=0.5)
+    ema.fold(_window_agg({"f": [[0.4, 0.8, 0.1]] * 2}))
+    pats, kinds = ema.finalize()
+    np.testing.assert_allclose(pats["f"], [[0.4, 0.8, 0.1]] * 2, rtol=1e-6)
+    assert kinds["f"] == Kind.GPU
+
+
+def test_ema_fold_is_exponential_average():
+    ema = EmaPatternAggregator(2, alpha=0.5)
+    ema.fold(_window_agg({"f": [[0.4, 0.8, 0.1]] * 2}))
+    ema.fold(_window_agg({"f": [[0.8, 0.4, 0.3]] * 2}))
+    pats, _ = ema.finalize()
+    np.testing.assert_allclose(pats["f"], [[0.6, 0.6, 0.2]] * 2, rtol=1e-6)
+
+
+def test_ema_absent_function_decays_toward_zero():
+    ema = EmaPatternAggregator(2, alpha=0.5)
+    ema.fold(_window_agg({"f": [[0.4, 0.8, 0.1]] * 2}))
+    ema.fold(_window_agg({"g": [[0.2, 0.2, 0.2]] * 2}))   # f absent
+    pats, _ = ema.finalize()
+    np.testing.assert_allclose(pats["f"], [[0.2, 0.4, 0.05]] * 2, rtol=1e-6)
+    # g is first-seen: full value, no alpha ramp-up
+    np.testing.assert_allclose(pats["g"], [[0.2, 0.2, 0.2]] * 2, rtol=1e-6)
+
+
+def test_ema_rejects_worker_mismatch():
+    ema = EmaPatternAggregator(3, alpha=0.5)
+    with pytest.raises(ValueError):
+        ema.fold(_window_agg({"f": [[0.4, 0.8, 0.1]] * 2}))
+
+
+def test_ema_grows_function_axis():
+    ema = EmaPatternAggregator(2, alpha=0.5, expected_functions=1)
+    for i in range(10):
+        ema.fold(_window_agg({f"f{i}": [[0.1, 0.2, 0.3]] * 2}))
+    assert ema.n_functions == 10
+    pats, _ = ema.finalize()
+    assert pats["f9"].shape == (2, 3)
+
+
+# -- escalation policy --------------------------------------------------------
+
+def _abn(workers):
+    idx = np.asarray(sorted(workers), np.int64)
+    return Abnormality(function="f", workers=idx, kind=Kind.GPU,
+                       d_expect=np.zeros(idx.size), delta=np.zeros(idx.size),
+                       patterns=np.zeros((idx.size, 3), np.float32),
+                       typical=np.zeros(3, np.float32))
+
+
+def test_escalation_base_until_implicated():
+    esc = EscalationPolicy(8, base_rate_hz=100.0, full_rate_hz=1000.0,
+                           cooldown_windows=2)
+    np.testing.assert_allclose(esc.rates(), 100.0)
+    esc.observe([_abn({2, 5})])
+    rates = esc.rates()
+    assert rates[2] == rates[5] == 1000.0
+    assert rates[0] == 100.0
+    assert esc.escalated == [2, 5]
+
+
+def test_escalation_cooldown_expires():
+    esc = EscalationPolicy(8, base_rate_hz=100.0, full_rate_hz=1000.0,
+                           cooldown_windows=2)
+    esc.observe([_abn({2})])
+    esc.observe([])                  # 1 clean window: still escalated
+    assert esc.escalated == [2]
+    esc.observe([])                  # cooldown exhausted
+    assert esc.escalated == []
+
+
+def test_escalation_reimplication_resets_cooldown():
+    esc = EscalationPolicy(8, base_rate_hz=100.0, full_rate_hz=1000.0,
+                           cooldown_windows=2)
+    esc.observe([_abn({2})])
+    esc.observe([_abn({2})])
+    esc.observe([])
+    assert esc.escalated == [2]
+
+
+def test_escalation_budget_caps_fleet_wide_faults():
+    esc = EscalationPolicy(16, base_rate_hz=100.0, full_rate_hz=1000.0,
+                           cooldown_windows=2, max_escalated=4)
+    esc.observe([_abn(set(range(16)))])          # fleet-wide abnormality
+    assert len(esc.escalated) == 4
+    assert (esc.rates() == 1000.0).sum() == 4
+    # fresh implications evict cooldown holdovers beyond the budget
+    esc.observe([_abn({8, 9, 10, 11})])
+    assert esc.escalated == [8, 9, 10, 11]
+
+
+def test_escalation_budget_is_hard_with_truncated_holdovers():
+    """Regression: a holdover implicated this window but truncated out of
+    the budget must still count against it — the budget is a hard cap."""
+    esc = EscalationPolicy(8, base_rate_hz=100.0, full_rate_hz=1000.0,
+                           cooldown_windows=2, max_escalated=2)
+    esc.observe([_abn({5, 6})])
+    esc.observe([_abn({1, 2, 3, 5})])     # fresh truncates to {1, 2}
+    assert len(esc.escalated) <= 2
+    assert esc.escalated == [1, 2]
+
+
+def test_escalation_rejects_inverted_rates():
+    with pytest.raises(ValueError):
+        EscalationPolicy(8, base_rate_hz=1000.0, full_rate_hz=100.0)
+
+
+def test_escalation_window_bytes_tracks_rates():
+    esc = EscalationPolicy(4, base_rate_hz=100.0, full_rate_hz=1000.0)
+    base = esc.window_bytes(window_s=2.0)
+    assert base == 4 * 100.0 * 2.0 * 4 * 8
+    esc.escalate([0])
+    assert esc.window_bytes(window_s=2.0) > base
+
+
+# -- per-worker sample rates through simulator + fleet batching ---------------
+
+def test_profile_window_per_worker_rates():
+    cfg = SimConfig(n_workers=4, window_s=1.0, rate_hz=2000.0, seed=3)
+    sim = FleetSimulator(cfg, [F.GpuThrottle(workers=[1])])
+    rates = np.array([250.0, 2000.0, 250.0, 250.0])
+    profiles = sim.profile_window(rates=rates)
+    for p, r in zip(profiles, rates):
+        for st in p.streams.values():
+            assert st.rate_hz == r
+            assert len(st.values) == int(r * cfg.window_s)
+
+
+def test_profile_window_uniform_rates_match_default():
+    cfg = SimConfig(n_workers=3, window_s=1.0, rate_hz=500.0, seed=3)
+    fault = [F.GpuThrottle(workers=[1])]
+    a = FleetSimulator(cfg, fault).profile_window()
+    b = FleetSimulator(cfg, fault).profile_window(
+        rates=np.full(3, cfg.rate_hz))
+    for pa, pb in zip(a, b):
+        assert [e.name for e in pa.events] == [e.name for e in pb.events]
+        for k in pa.streams:
+            np.testing.assert_array_equal(pa.streams[k].values,
+                                          pb.streams[k].values)
+
+
+def test_profile_window_rejects_bad_rate_shape():
+    sim = FleetSimulator(SimConfig(n_workers=4))
+    with pytest.raises(ValueError):
+        sim.profile_window(rates=np.array([100.0, 200.0]))
+
+
+# -- incident manager unit behavior -------------------------------------------
+
+def _trig(t=10.0):
+    from repro.core.detector import Trigger
+    return Trigger("slowdown", t, 1.3, 1.0)
+
+
+def test_incident_single_trigger_single_incident():
+    mgr = IncidentManager(fleet_size=8)
+    assert mgr.on_trigger(_trig(10.0)) is not None
+    # reminder trigger while the incident is active: no second incident
+    assert mgr.on_trigger(_trig(20.0)) is None
+    assert len(mgr.incidents) == 1
+
+
+def test_incident_transient_trigger_resolves_on_recovery():
+    mgr = IncidentManager(fleet_size=8)
+    mgr.on_trigger(_trig(10.0))
+    resolved = mgr.on_recovery(Recovery("slowdown", 30.0))
+    assert [i.state for i in resolved] == [RESOLVED]
+    assert mgr.active == []
+
+
+def test_incident_triggerless_needs_consecutive_windows():
+    mgr = IncidentManager(fleet_size=8, confirm_windows=2)
+    d = PerfTrackerService().diagnose_patterns(
+        {"f": np.tile([0.5, 0.2, 0.1], (8, 1)).astype(np.float32)},
+        {"f": Kind.PYTHON}).diagnoses
+    assert d                                   # beta 0.5 >> 1% python box
+    mgr.on_window(1.0, d)                      # first sighting: candidate
+    assert mgr.incidents == []
+    mgr.on_window(2.0, [])                     # streak broken
+    mgr.on_window(3.0, d)
+    assert mgr.incidents == []
+    mgr.on_window(4.0, d)                      # two consecutive: incident
+    assert len(mgr.incidents) == 1
+    assert mgr.incidents[0].state == CONFIRMED
+
+
+# -- detector recovery events + config aliasing (bugfix regressions) ----------
+
+D, O = "dataloader.next", "optimizer.step"
+
+
+def _feed(det, n, t0, dur):
+    t = t0
+    for _ in range(n):
+        det.feed(D, t)
+        det.feed(O, t + dur * 0.97)
+        t += dur
+    return t
+
+
+def test_detector_emits_slowdown_recovery():
+    det = IterationDetector(DetectorConfig(n_recent=20, rearm_cooldown=0))
+    t = _feed(det, 30, 0.0, 1.0)
+    t = _feed(det, 30, t, 1.3)
+    assert len(det.triggers) == 1 and det.recoveries == []
+    assert not det.healthy
+    _feed(det, 40, t, 1.0)
+    assert [r.reason for r in det.recoveries] == ["slowdown"]
+    assert det.healthy
+
+
+def test_detector_emits_blockage_recovery():
+    det = IterationDetector()
+    t = _feed(det, 15, 0.0, 1.0)
+    assert det.check_blockage(t + 10.0) is not None
+    assert not det.healthy
+    _feed(det, 1, t + 60.0, 1.0)
+    assert [r.reason for r in det.recoveries] == ["blockage"]
+    assert det.healthy
+
+
+def test_service_detector_cfg_not_aliased():
+    """Regression: the old ``detector_cfg: DetectorConfig = DetectorConfig()``
+    default evaluated ONCE — every default-constructed service shared (and
+    could retune) the same config instance."""
+    a = PerfTrackerService()
+    b = PerfTrackerService()
+    assert a.detector.cfg is not b.detector.cfg
+    a.detector.cfg.slowdown_ratio = 99.0
+    assert b.detector.cfg.slowdown_ratio == 1.05
+
+
+def test_iteration_detector_cfg_not_aliased():
+    a = IterationDetector()
+    b = IterationDetector()
+    assert a.cfg is not b.cfg
+    a.cfg.n_recent = 7
+    assert b.cfg.n_recent == 50

@@ -4,8 +4,7 @@ import pytest
 
 from _prop import given, settings, st   # hypothesis or graceful skip
 
-from repro.core.critical_path import critical_intervals, \
-    critical_time_by_function
+from repro.core.critical_path import critical_time_by_function
 from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
 from repro.core.patterns import MASS_FRACTION, critical_duration, \
     summarize_worker

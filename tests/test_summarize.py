@@ -12,7 +12,7 @@ import pytest
 from repro.core.daemon import summarize_and_upload
 from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
 from repro.core.localizer import Localizer
-from repro.core.patterns import Pattern, critical_duration, summarize_worker
+from repro.core.patterns import critical_duration, summarize_worker
 from repro.core.service import PerfTrackerService
 from repro.summarize import (PatternAggregator, available_backends,
                              get_backend, pack_profile, resolve_kinds,

@@ -1,8 +1,6 @@
 """End-to-end trainer: loss improves, checkpoints resume, PerfTracker
 triggers online on an injected storage fault (paper case C2P1, live)."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import ARCHS, reduced
 from repro.data.pipeline import DataConfig
