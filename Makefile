@@ -1,7 +1,7 @@
 PY ?= python
 
-.PHONY: test deps lint bench bench-summarize bench-fleet bench-online \
-        bench-gate bench-gate-update
+.PHONY: test test-wire test-cov deps lint bench bench-summarize bench-fleet \
+        bench-online bench-wire bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -9,6 +9,23 @@ deps:
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# multi-process wire-transport integration tests only (the CI `wire` job);
+# per-test timeouts via pytest-timeout so a hung socket cannot wedge CI
+test-wire:
+	PYTHONPATH=src $(PY) -m pytest -q -m wire --timeout=300
+
+# the committed coverage floor: `make test-cov` fails if total line
+# coverage of src/repro drops below it.  Raise it when coverage improves;
+# never lower it to make a PR pass.
+COV_FLOOR ?= 60
+
+test-cov:
+	PYTHONPATH=src $(PY) -m pytest -q --cov=repro --cov-report=xml \
+	    --cov-report=term-missing:skip-covered
+	$(PY) -m coverage report --fail-under=$(COV_FLOOR) > /dev/null \
+	    || { echo "FAIL: total coverage below floor ($(COV_FLOOR)%)"; \
+	         exit 1; }
 
 lint:
 	ruff check .
@@ -25,10 +42,13 @@ bench-fleet:
 bench-online:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only online_pipeline
 
-# the CI benchmark-regression gate: run the three gated benchmarks with the
+bench-wire:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only wire_transport
+
+# the CI benchmark-regression gate: run the four gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

@@ -21,6 +21,7 @@ MODULES = [
     ("summarize_backends", "ISSUE 1: summarize backend shootout"),
     ("fleet_diagnosis", "ISSUE 2: fleet-batched vs per-worker diagnosis"),
     ("online_pipeline", "ISSUE 3: online pipeline / differential escalation"),
+    ("wire_transport", "ISSUE 4: wire transport throughput / p99 latency"),
     ("kernels_bench", "kernel micro-bench"),
     ("roofline_table", "EXPERIMENTS §Roofline (from dry-run artifacts)"),
 ]

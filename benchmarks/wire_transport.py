@@ -1,0 +1,101 @@
+"""ISSUE 4: wire-transport throughput and latency (DESIGN.md §8).
+
+Measures the transport layer in isolation (uploads are pre-summarized once
+— socket framing, per-worker connections, and window assembly are the
+variables): W persistent ``WireClient`` connections to one ``DaemonServer``
+over a Unix-domain socket push ``N_WINDOWS`` full windows of ~KB pattern
+uploads; the collector assembles each.
+
+Rows::
+
+    wire/upload_W<W>,  us per assembled window,
+        throughput_wps=<windows/s>;p99_upload_us=<per-upload enqueue->
+        assemble latency>;delivered=Y|N;payload_kb=<per-window KB>
+
+``delivered`` is the deterministic gate flag: every upload of every window
+must arrive (loopback is lossless — a drop here is a transport bug).
+Throughput is gated with a generous tolerance (absolute wall-clock moves
+with the CI machine); p99 latency is reported ungated.
+
+Env knobs (CI smoke): ``REPRO_BENCH_WIRE_W`` (default 64),
+``REPRO_BENCH_WIRE_WINDOWS`` (default 8).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+W = int(os.environ.get("REPRO_BENCH_WIRE_W", "64"))
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_WIRE_WINDOWS", "8"))
+N_FUNCTIONS = 40          # ~KB payload per upload, like the paper's Fig. 11
+
+
+def _uploads():
+    """One fleet of realistic ~KB uploads (pre-summarized once)."""
+    import msgpack
+    from repro.core.daemon import PatternUpload
+    rng = np.random.default_rng(0)
+    out = []
+    for w in range(W):
+        payload = msgpack.packb({
+            f"train.py:train_loop/module_{i}.py:forward_{i}": (
+                float(rng.uniform(0, 0.5)), float(rng.uniform(0, 1)),
+                float(rng.uniform(0, 0.2)), int(i % 4))
+            for i in range(N_FUNCTIONS)})
+        out.append(PatternUpload(worker=w, payload=payload,
+                                 summarize_s=0.0, raw_bytes=1 << 20))
+    return out
+
+
+def run():
+    from repro.transport import DaemonServer, WindowCollector, WireClient
+    uploads = _uploads()
+    payload_kb = sum(len(u.payload) for u in uploads) / 1024.0
+    collector = WindowCollector(range(W))
+    latencies = []
+    delivered = True
+    with DaemonServer(collector) as server:
+        clients = [WireClient(server.address, u.worker) for u in uploads]
+        try:
+            # warmup window (connection setup, allocator)
+            for c, u in zip(clients, uploads):
+                c.send_upload(-1, u)
+                c.end_window(-1)
+            collector.wait_window(-1, timeout=30.0)
+
+            t_start = time.perf_counter()
+            window_times = []
+            for i in range(N_WINDOWS):
+                t0 = time.perf_counter()
+                enq = {}
+                for c, u in zip(clients, uploads):
+                    enq[u.worker] = time.perf_counter()
+                    c.send_upload(i, u)
+                    c.end_window(i)
+                batch = collector.wait_window(i, timeout=30.0)
+                t1 = time.perf_counter()
+                window_times.append(t1 - t0)
+                # per-upload latency: enqueue -> window assembled (upper
+                # bound; the collector does not timestamp each frame)
+                latencies += [t1 - enq[w] for w in batch.present]
+                delivered &= (len(batch.uploads) == W
+                              and batch.duplicates == 0
+                              and not batch.timed_out)
+            total = time.perf_counter() - t_start
+        finally:
+            for c in clients:
+                c.close()
+    wps = N_WINDOWS / total
+    p99 = float(np.percentile(latencies, 99)) * 1e6 if latencies else 0.0
+    return [(f"wire/upload_W{W}",
+             float(np.median(window_times)) * 1e6,
+             f"throughput_wps={wps:.1f};p99_upload_us={p99:.0f};"
+             f"delivered={'Y' if delivered else 'N'};"
+             f"payload_kb={payload_kb:.1f}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

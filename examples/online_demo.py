@@ -1,4 +1,4 @@
-"""Online incident pipeline demo (DESIGN.md §7).
+"""Online incident pipeline demo (DESIGN.md §7, §8).
 
 A 14-window simulated training run: GPUs on workers 3 and 11 start
 throttling at window 2; a slow-storage fault overlaps from window 4; both
@@ -6,47 +6,87 @@ clear later.  The fleet profiles at a cheap 250 Hz base rate — only
 implicated workers escalate to the full 2 kHz.
 
 Run:  PYTHONPATH=src python examples/online_demo.py
+      PYTHONPATH=src python examples/online_demo.py --wire [--loss 0.1]
+
+``--wire`` runs the SAME scenario across real process boundaries: 4
+spawned worker processes each run per-worker daemons over their slice of
+the fleet and upload ~KB patterns over a Unix socket (DESIGN.md §8);
+``--loss`` injects that fraction of upload drops at the framing layer to
+show the partial-window degradation story.
 """
+import argparse
+
 from repro.core import faults as F
 from repro.core.simulation import SimConfig
 from repro.online import EscalationPolicy, ScenarioRunner, ScheduledFault
 
 W = 24
 
-schedule = [
-    ScheduledFault(F.GpuThrottle(workers=(3, 11)), start_window=2,
-                   end_window=8),
-    ScheduledFault(F.SlowDataloader(), start_window=4, end_window=10),
-]
-escalation = EscalationPolicy(n_workers=W, base_rate_hz=250.0,
-                              full_rate_hz=2000.0, max_escalated=8)
-runner = ScenarioRunner(
-    SimConfig(n_workers=W, window_s=1.0, rate_hz=2000.0, seed=5),
-    schedule, n_windows=14, escalation=escalation)
 
-result = runner.run()
+def make_runner():
+    schedule = [
+        ScheduledFault(F.GpuThrottle(workers=(3, 11)), start_window=2,
+                       end_window=8),
+        ScheduledFault(F.SlowDataloader(), start_window=4, end_window=10),
+    ]
+    escalation = EscalationPolicy(n_workers=W, base_rate_hz=250.0,
+                                  full_rate_hz=2000.0, max_escalated=8)
+    return ScenarioRunner(
+        SimConfig(n_workers=W, window_s=1.0, rate_hz=2000.0, seed=5),
+        schedule, n_windows=14, escalation=escalation), schedule
 
-print("=== per-window reports " + "=" * 40)
-for rep in result.reports:
-    faults = [type(f.fault).__name__ for f in schedule
-              if f.active(rep.index)]
-    print(f"\n-- window {rep.index:2d}  t={rep.t:7.1f}s  "
-          f"faults={faults or ['-']}  escalated={rep.escalated or '-'}  "
-          f"raw={rep.raw_bytes / 1e6:.1f}MB")
-    print(rep.report(W))
 
-print("\n=== incident timeline " + "=" * 41)
-print(result.timeline())
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--wire", action="store_true",
+                    help="run across 4 real worker processes over the wire "
+                         "transport (DESIGN.md §8)")
+    ap.add_argument("--loss", type=float, default=0.0,
+                    help="with --wire: fraction of upload frames dropped at "
+                         "the framing layer")
+    args = ap.parse_args()
 
-print("\n=== cost " + "=" * 54)
-total = sum(r.raw_bytes for r in result.reports)
-full = len(result.reports) * W * 1.0 * 2000.0 * 4 * 8
-print(f"bytes profiled: {total / 1e6:.1f} MB "
-      f"(always-full-rate would be ~{full / 1e6:.1f} MB -> "
-      f"{full / total:.1f}x saved by differential escalation)")
-for inc in result.incidents:
-    ow = result.window_of(inc.opened_at)
-    rw = (result.window_of(inc.resolved_at)
-          if inc.resolved_at is not None else None)
-    print(f"incident #{inc.id}: {inc.function[:44]} [{inc.state}] "
-          f"windows {ow}->{rw} workers={list(inc.workers)[:8]}")
+    runner, schedule = make_runner()
+    if args.wire:
+        result = runner.run_multiprocess(n_procs=4, loss=args.loss)
+    else:
+        result = runner.run()
+
+    print("=== per-window reports " + "=" * 40)
+    for rep in result.reports:
+        faults = [type(f.fault).__name__ for f in schedule
+                  if f.active(rep.index)]
+        print(f"\n-- window {rep.index:2d}  t={rep.t:7.1f}s  "
+              f"faults={faults or ['-']}  escalated={rep.escalated or '-'}  "
+              f"raw={rep.raw_bytes / 1e6:.1f}MB")
+        print(rep.report(W))
+
+    wire = result.wire_summary()
+    if wire is not None:
+        print("\n=== wire transport " + "=" * 44)
+        print(f"uploads delivered: {wire['delivered']}/{wire['expected']}  "
+              f"partial windows: {wire['partial_windows']}  "
+              f"duplicates: {wire['duplicates']}  "
+              f"client-side drops: {wire['client_dropped']}")
+
+    print("\n=== incident timeline " + "=" * 41)
+    print(result.timeline())
+
+    print("\n=== cost " + "=" * 54)
+    total = sum(r.raw_bytes for r in result.reports)
+    full = len(result.reports) * W * 1.0 * 2000.0 * 4 * 8
+    print(f"bytes profiled: {total / 1e6:.1f} MB "
+          f"(always-full-rate would be ~{full / 1e6:.1f} MB -> "
+          f"{full / total:.1f}x saved by differential escalation)")
+    for inc in result.incidents:
+        ow = result.window_of(inc.opened_at)
+        rw = (result.window_of(inc.resolved_at)
+              if inc.resolved_at is not None else None)
+        print(f"incident #{inc.id}: {inc.function[:44]} [{inc.state}] "
+              f"windows {ow}->{rw} workers={list(inc.workers)[:8]}")
+
+
+# the __main__ guard is load-bearing for --wire: the multiprocessing spawn
+# context re-imports this script in every worker process
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,20 @@
 """Per-worker PerfTracker daemon (paper §4, Fig. 6): receives the raw
 profiling window from its worker, summarizes runtime behavior patterns in a
-separate process/core (here: same process, separate function — the training
-thread is never blocked), and uploads only the ~KB pattern dict.
+separate process/core (the training thread is never blocked), and uploads
+only the ~KB pattern dict.
 
 Summarization runs through the pluggable batched backend in
 ``repro.summarize`` (DESIGN.md §3); pick one per call, or fleet-wide via the
-``REPRO_SUMMARIZE_BACKEND`` env var.
+``REPRO_SUMMARIZE_BACKEND`` env var.  ``PerfTrackerDaemon`` is the deployed
+shape: summarize locally, ship the payload over the real wire transport
+(``repro.transport``, DESIGN.md §8) through a bounded drop-oldest send
+queue, never stalling on a slow collector.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import msgpack
 import numpy as np
@@ -34,7 +37,7 @@ class PatternUpload:
 
 
 def summarize_and_upload(profile: WorkerProfile,
-                         kind_of: Dict[str, Kind] = None,
+                         kind_of: Optional[Dict[str, Kind]] = None,
                          backend=None) -> PatternUpload:
     """Summarize one worker and build its upload. ``kind_of`` overrides flow
     through the single kind-resolution path in ``repro.summarize.packing``
@@ -49,3 +52,43 @@ def summarize_and_upload(profile: WorkerProfile,
     return PatternUpload(worker=profile.worker, payload=payload,
                          summarize_s=time.perf_counter() - t0,
                          raw_bytes=profile.raw_size_bytes())
+
+
+class PerfTrackerDaemon:
+    """One worker's resident daemon: summarize each profiling window and
+    ship the ~KB upload over the wire (DESIGN.md §8).
+
+    The wire client's bounded queue is the backpressure valve: a slow or
+    unreachable collector costs dropped (oldest-first) uploads, never a
+    blocked training step.  ``end_window`` closes the window on the wire so
+    the collector can assemble it without waiting on holes.
+    """
+
+    def __init__(self, worker: int, address, backend=None,
+                 max_queue: int = 64, frame_filter=None):
+        # late import: repro.transport pulls framing/msgpack only when a
+        # daemon actually goes on the wire
+        from repro.transport.client import WireClient
+        self.worker = int(worker)
+        self.backend = backend
+        self.client = WireClient(address, worker, max_queue=max_queue,
+                                 frame_filter=frame_filter)
+
+    def process_window(self, window: int, profile: WorkerProfile,
+                       kind_of: Optional[Dict[str, Kind]] = None
+                       ) -> PatternUpload:
+        """Summarize one raw window, enqueue its upload, close the window."""
+        upload = summarize_and_upload(profile, kind_of, backend=self.backend)
+        self.client.send_upload(window, upload)
+        self.client.end_window(window)
+        return upload
+
+    def recv_control(self, timeout: Optional[float] = None):
+        return self.client.recv_control(timeout=timeout)
+
+    @property
+    def dropped(self) -> int:
+        return self.client.dropped
+
+    def close(self) -> None:
+        self.client.close()

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -79,7 +79,33 @@ class Localizer:
         return hits / np.maximum(not_self.sum(axis=1), 1)  # Eq. 9-10
 
     def localize(self, patterns: Dict[str, np.ndarray],
-                 kinds: Dict[str, Kind]) -> List[Abnormality]:
+                 kinds: Dict[str, Kind],
+                 present: Optional[np.ndarray] = None) -> List[Abnormality]:
+        """Localize abnormal (function, worker) pairs.
+
+        ``present`` (bool mask over the fleet's worker rows) restricts the
+        statistics to workers whose patterns actually arrived — the wire
+        transport's partial-window semantics (DESIGN.md §8).  Absent
+        workers contribute no peers, no median, and can never be flagged;
+        with fewer peers Delta_{f,w} quantizes coarser, so localization
+        confidence degrades gracefully instead of the missing rows' zeros
+        poisoning the fleet median.  Reported worker ids stay GLOBAL."""
+        if present is not None:
+            present = np.asarray(present, bool)
+            idx_global = np.flatnonzero(present)
+            if idx_global.size == present.size:
+                present = None        # full fleet: identical to the default
+        if present is None:
+            return self._localize_full(patterns, kinds)
+        sub = {name: np.asarray(p)[idx_global] for name, p in
+               patterns.items()}
+        out = self._localize_full(sub, kinds)
+        for a in out:
+            a.workers = idx_global[a.workers]
+        return out
+
+    def _localize_full(self, patterns: Dict[str, np.ndarray],
+                       kinds: Dict[str, Kind]) -> List[Abnormality]:
         out: List[Abnormality] = []
         for name, pats in patterns.items():
             kind = kinds.get(name, Kind.PYTHON)

@@ -97,3 +97,14 @@ def format_report(diagnoses: List[Diagnosis], fleet_size: int) -> str:
             f"{a.typical[0]:8.3f} {a.typical[1]:7.3f}")
         lines.append(f"    [{a.reason}] -> {d.hint}")
     return "\n".join(lines)
+
+
+def format_transport(tr) -> str:
+    """One-line wire-transport summary for reports (DESIGN.md §8): the
+    counters a ``transport.WindowBatch.stats()`` dict carries."""
+    out = (f"transport: {tr['present']}/{tr['expected']} workers "
+           f"reported; dropped={tr['client_dropped']} "
+           f"duplicates={tr['duplicates']}")
+    if tr["missing"]:
+        out += f" missing={list(tr['missing'])}"
+    return out

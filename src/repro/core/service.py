@@ -4,7 +4,7 @@
   every worker -> pattern summarization -> centralized localization (single
   core) -> Fig.-7 report (+ mitigation hooks).
 
-Summarization runs in one of two modes (DESIGN.md §5):
+Summarization runs in one of two modes (DESIGN.md §5, §8):
 
   * ``fleet`` (default) — the in-process fast path: all W workers'
     executions are packed into one ragged batch per stream rate, the
@@ -12,15 +12,20 @@ Summarization runs in one of two modes (DESIGN.md §5):
     fleet, and patterns scatter-reduce straight into the aggregator's
     columnar ``(W, F, 3)`` buffer.  msgpack never runs.
   * ``wire`` — the distributed-daemon shape: one ``summarize_and_upload``
-    per worker, each producing the ~KB msgpack payload that would cross the
-    network, folded in by the streaming ``PatternAggregator``.
+    per worker, each ~KB msgpack payload shipped through the REAL
+    transport (``repro.transport``: length-prefixed frames over a Unix
+    socket, per-worker connections, bounded send queues), reassembled by
+    the ``WindowCollector``, and folded into the ``PatternAggregator``.
+    Dropped uploads degrade the diagnosis (absent workers are excluded
+    from localization statistics) instead of crashing it.
 
-Both modes produce byte-identical diagnoses (a tested invariant).
+With no loss, both modes produce byte-identical diagnoses (a tested
+invariant).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -29,7 +34,8 @@ from repro.core.detector import DetectorConfig, IterationDetector, Trigger
 from repro.core.daemon import PatternUpload, summarize_and_upload
 from repro.core.events import Kind, WorkerProfile
 from repro.core.localizer import Localizer
-from repro.core.report import Diagnosis, build_report, format_report
+from repro.core.report import (Diagnosis, build_report, format_report,
+                               format_transport)
 from repro.summarize.aggregate import PatternAggregator
 from repro.summarize.fleet import summarize_fleet
 
@@ -42,9 +48,15 @@ class DiagnosisResult:
     timing: Dict[str, float]
     pattern_bytes: int
     raw_bytes: int
+    #: wire-transport counters for this diagnosis (None off the wire):
+    #: present/missing workers, dedup and client-side drop counts
+    transport: Optional[Dict[str, object]] = field(default=None)
 
     def report(self) -> str:
-        return format_report(self.diagnoses, self.fleet_size)
+        out = format_report(self.diagnoses, self.fleet_size)
+        if self.transport is not None:
+            out += "\n" + format_transport(self.transport)
+        return out
 
     def functions(self) -> List[str]:
         return [d.abnormality.function for d in self.diagnoses]
@@ -55,8 +67,12 @@ class PerfTrackerService:
 
     def __init__(self, family: str = "dense",
                  detector_cfg: Optional[DetectorConfig] = None,
-                 summarize_backend=None):
+                 summarize_backend=None,
+                 wire_frame_filter=None):
         self.family = family
+        #: framing-layer fault hook threaded into ``mode="wire"`` loopback
+        #: clients (tests inject upload loss/duplication here)
+        self.wire_frame_filter = wire_frame_filter
         # None -> a fresh DetectorConfig per service; an eagerly-evaluated
         # default would be ONE module-level instance aliased across every
         # PerfTrackerService (mutating one service's thresholds would
@@ -86,16 +102,67 @@ class PerfTrackerService:
         agg = PatternAggregator(expected_workers=len(uploads))
         return agg.extend(uploads).finalize()
 
+    def aggregate_batch(self, uploads: Sequence[PatternUpload],
+                        fleet_size: int,
+                        row_of: Optional[Dict[int, int]] = None
+                        ) -> Tuple[PatternAggregator, np.ndarray]:
+        """Scatter a (possibly partial) set of uploads into a full-width
+        ``(fleet_size, F, 3)`` aggregator.  ``row_of`` maps worker id ->
+        fleet row (identity when None).  Returns the aggregator and the
+        present-row mask; absent rows stay zero."""
+        agg = PatternAggregator(expected_workers=max(1, fleet_size))
+        agg.reserve_workers(fleet_size)
+        present = np.zeros(fleet_size, bool)
+        # ascending-row order keeps function interning (and therefore
+        # first-seen kinds + column order) identical to the streaming path
+        def row(u):
+            return row_of[u.worker] if row_of else u.worker
+        for u in sorted(uploads, key=row):
+            agg.add_upload_at(u, row(u))
+            present[row(u)] = True
+        return agg, present
+
+    def diagnose_batch(self, batch, fleet_size: Optional[int] = None,
+                       row_of: Optional[Dict[int, int]] = None,
+                       trigger: Optional[Trigger] = None,
+                       timing: Optional[Dict[str, float]] = None
+                       ) -> DiagnosisResult:
+        """Diagnose one assembled wire window (``transport.WindowBatch``).
+
+        Missing workers' rows stay zero and are masked out of localization
+        (fewer peers -> coarser Delta, degraded confidence — DESIGN.md §8)
+        instead of crashing or polluting the fleet median."""
+        if fleet_size is None:
+            fleet_size = len(batch.expected)
+        uploads = batch.sorted_uploads()
+        t1 = time.perf_counter()
+        agg, present = self.aggregate_batch(uploads, fleet_size, row_of)
+        pats, kinds = agg.finalize()
+        abn = self.localizer.localize(pats, kinds, present=present)
+        timing = dict(timing or {})
+        timing["localize_s"] = time.perf_counter() - t1
+        timing["upload_summarize_s"] = sum(u.summarize_s for u in uploads)
+        return DiagnosisResult(
+            trigger=trigger,
+            diagnoses=build_report(abn, fleet_size),
+            fleet_size=fleet_size,
+            timing=timing,
+            pattern_bytes=sum(len(u.payload) for u in uploads),
+            raw_bytes=sum(u.raw_bytes for u in uploads),
+            transport=batch.stats())
+
     def diagnose_profiles(self, profiles: Sequence[WorkerProfile],
-                          kind_of: Dict[str, Kind] = None,
+                          kind_of: Optional[Dict[str, Kind]] = None,
                           trigger: Optional[Trigger] = None,
                           mode: str = "fleet") -> DiagnosisResult:
         """Diagnose one fleet of raw profiling windows.
 
         ``mode="fleet"`` (default) batches the whole fleet through one
-        summarization pass in-process; ``mode="wire"`` exercises the
-        per-worker daemon/upload shape used in distributed deployments.
-        Diagnoses are byte-identical between the two.
+        summarization pass in-process; ``mode="wire"`` runs the
+        distributed-daemon shape over the REAL transport: per-worker
+        summarize + upload through Unix-socket connections into the
+        ``WindowCollector`` (DESIGN.md §8).  With no loss, diagnoses are
+        byte-identical between the two.
         """
         timing = {}
         t0 = time.perf_counter()
@@ -107,13 +174,24 @@ class PerfTrackerService:
             agg, kinds = fs.agg.finalize()
             pattern_bytes = fs.pattern_bytes
         elif mode == "wire":
+            from repro.transport import LoopbackWire
             uploads = [summarize_and_upload(p, kind_of,
                                             backend=self.summarize_backend)
                        for p in profiles]
             timing["summarize_s"] = time.perf_counter() - t0
-            t1 = time.perf_counter()
-            agg, kinds = self.aggregate(uploads)
-            pattern_bytes = sum(len(u.payload) for u in uploads)
+            t2 = time.perf_counter()
+            with LoopbackWire([p.worker for p in profiles],
+                              frame_filter=self.wire_frame_filter) as wire:
+                batch = wire.send_round(uploads, window=0)
+            timing["transport_s"] = time.perf_counter() - t2
+            row_of = {p.worker: i for i, p in enumerate(profiles)}
+            res = self.diagnose_batch(batch, fleet_size=len(profiles),
+                                      row_of=row_of, trigger=trigger,
+                                      timing=timing)
+            # raw bytes are the profiles actually materialized, delivered
+            # or not — the transport only ever sees the ~KB patterns
+            res.raw_bytes = sum(p.raw_size_bytes() for p in profiles)
+            return res
         else:
             raise ValueError(f"unknown diagnosis mode {mode!r}; "
                              "expected 'fleet' or 'wire'")

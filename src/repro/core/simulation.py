@@ -98,6 +98,30 @@ class FleetSimulator:
         return out
 
     # -- raw profiling window ---------------------------------------------
+    def _ring_by_rate(self, rates: Optional[np.ndarray],
+                      seed: Optional[int]) -> Dict[float, np.ndarray]:
+        """Ring-collective traces per distinct sample rate.
+
+        With a per-window ``seed`` the draw is seeded from it — NOT from
+        the simulator's own rng — so the traces are a pure function of
+        (seed, rates): every worker process of a multi-process run
+        (DESIGN.md §8) reproduces the same ring, regardless of how many
+        anchor draws its local simulator has made.  ``seed=None`` keeps
+        the historical shared-rng behavior byte-identical."""
+        cfg = self.cfg
+        ring_fault = self._fault(F.RingSlowLink)
+        if not ring_fault:
+            return {}
+        rf = ring_fault[0]
+        rng = self.rng if seed is None \
+            else np.random.default_rng((seed, 1 << 20))
+        distinct = [cfg.rate_hz] if rates is None else \
+            sorted({float(r) for r in rates})
+        return {r: ring_utilization(
+            RingConfig(n_workers=cfg.n_workers), cfg.window_s,
+            r, slow_worker=rf.slow_worker, rho=rf.rho, rng=rng)
+            for r in distinct}
+
     def profile_window(self, rates: Optional[Sequence[float]] = None,
                        seed: Optional[int] = None) -> List[WorkerProfile]:
         """One fleet of raw profiling windows.
@@ -108,6 +132,21 @@ class FleetSimulator:
         them without re-padding.  ``seed`` varies the per-worker noise
         draw window to window (None keeps the config seed — byte-identical
         to the historical single-window behavior)."""
+        return self.profile_window_slice(range(self.cfg.n_workers),
+                                         rates=rates, seed=seed)
+
+    def profile_window_slice(self, workers: Sequence[int],
+                             rates: Optional[Sequence[float]] = None,
+                             seed: Optional[int] = None
+                             ) -> List[WorkerProfile]:
+        """Raw profiling windows for a SLICE of the fleet.
+
+        The per-worker noise is already seeded by (seed, worker), so a
+        worker process materializing only its own workers produces
+        bit-identical profiles to the full-fleet call — this is what each
+        daemon process of ``ScenarioRunner.run_multiprocess`` runs over
+        its share of the fleet.  ``rates`` stays FULL-fleet-shaped (the
+        escalation decision is global); each worker reads its own entry."""
         cfg = self.cfg
         if rates is not None:
             rates = np.asarray(rates, np.float64)
@@ -115,19 +154,13 @@ class FleetSimulator:
                 raise ValueError(
                     f"rates must have shape ({cfg.n_workers},), "
                     f"got {rates.shape}")
+        ring_by_rate = self._ring_by_rate(rates, seed)
         profiles = []
-        ring_fault = self._fault(F.RingSlowLink)
-        ring_by_rate: Dict[float, np.ndarray] = {}
-        if ring_fault:
-            rf = ring_fault[0]
-            distinct = [cfg.rate_hz] if rates is None else \
-                sorted({float(r) for r in rates})
-            for r in distinct:
-                ring_by_rate[r] = ring_utilization(
-                    RingConfig(n_workers=cfg.n_workers), cfg.window_s,
-                    r, slow_worker=rf.slow_worker, rho=rf.rho,
-                    rng=self.rng)
-        for w in range(cfg.n_workers):
+        for w in workers:
+            w = int(w)
+            if not 0 <= w < cfg.n_workers:
+                raise ValueError(f"worker {w} outside fleet "
+                                 f"[0, {cfg.n_workers})")
             r = cfg.rate_hz if rates is None else float(rates[w])
             profiles.append(self._worker_profile(
                 w, ring_by_rate.get(r), rate_hz=r, seed=seed))

@@ -25,7 +25,7 @@ resolve on signature-clear (``repro.online.incident``).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -52,7 +52,13 @@ class EmaPatternAggregator:
         self._kinds: Dict[str, Kind] = {}
         self._buf = np.zeros((self.n_workers, max(1, expected_functions), 3),
                              np.float32)
-        self._seen = np.zeros(max(1, expected_functions), bool)
+        #: per (worker, column): has this ROW ever folded present evidence
+        #: for the column?  Per-row (not per-column) so a worker whose
+        #: upload was dropped when a column first appeared still gets the
+        #: first-seen-full-value treatment on its own first evidence,
+        #: instead of an alpha-scaled ramp from the zero it never reported
+        self._seen = np.zeros((self.n_workers, max(1, expected_functions)),
+                              bool)
         self.n_windows = 0
 
     # -- growth (function axis only) ---------------------------------------
@@ -65,8 +71,8 @@ class EmaPatternAggregator:
                 grown = np.zeros((self.n_workers, 2 * F_cap, 3), np.float32)
                 grown[:, :F_cap] = self._buf
                 self._buf = grown
-                seen = np.zeros(2 * F_cap, bool)
-                seen[:F_cap] = self._seen
+                seen = np.zeros((self.n_workers, 2 * F_cap), bool)
+                seen[:, :F_cap] = self._seen
                 self._seen = seen
             self._col[name] = j
             self._names.append(name)
@@ -75,34 +81,72 @@ class EmaPatternAggregator:
         return j
 
     # -- folding -----------------------------------------------------------
-    def fold(self, agg: PatternAggregator) -> "EmaPatternAggregator":
-        """Fold one finished window's aggregator into the EMA state."""
+    def fold(self, agg: PatternAggregator,
+             present: Optional[np.ndarray] = None) -> "EmaPatternAggregator":
+        """Fold one finished window's aggregator into the EMA state.
+
+        ``present`` (bool mask, length W) marks the workers whose evidence
+        actually arrived this window — the wire transport's partial-window
+        semantics (DESIGN.md §8).  Absent workers' rows are FROZEN: no
+        decay, no update.  A dropped upload is the absence of evidence,
+        not evidence of absence, so the worker's last smoothed pattern
+        keeps implicating (or clearing) it until fresh data lands."""
         mat, names = agg.matrix()
         if mat.shape[0] != self.n_workers:
             raise ValueError(
                 f"window has {mat.shape[0]} workers, EMA tracks "
                 f"{self.n_workers}")
-        return self.fold_block(mat, names, agg.kinds())
+        return self.fold_block(mat, names, agg.kinds(), present=present)
 
     def fold_block(self, mat: np.ndarray, names: List[str],
-                   kinds: Dict[str, Kind]) -> "EmaPatternAggregator":
+                   kinds: Dict[str, Kind],
+                   present: Optional[np.ndarray] = None
+                   ) -> "EmaPatternAggregator":
         """Fold a raw ``(W, F_new, 3)`` block with its column names."""
+        if present is not None:
+            present = np.asarray(present, bool)
+            if present.shape != (self.n_workers,):
+                raise ValueError(
+                    f"present mask {present.shape} != ({self.n_workers},)")
+            if present.all():
+                present = None        # identical to the full-fleet fold
         cols = np.array([self._intern(nm, kinds.get(nm)) for nm in names],
                         np.int64)
         F = len(self._names)
         a = self.alpha
         buf = self._buf[:, :F]
-        # decay-toward-zero for every existing column ...
-        buf *= (1.0 - a)
-        if cols.size:
-            # ... then add the fresh evidence where this window reported
-            mat = mat.astype(np.float32, copy=False)
-            buf[:, cols] += a * mat
-            # first-seen columns: full value, not an alpha-scaled ramp-up
-            fresh = ~self._seen[cols]
-            if fresh.any():
-                buf[:, cols[fresh]] = mat[:, fresh]
-                self._seen[cols[fresh]] = True
+        if present is None:
+            # decay-toward-zero for every existing column ...
+            buf *= (1.0 - a)
+            if cols.size:
+                # ... then add the fresh evidence where this window reported
+                mat = mat.astype(np.float32, copy=False)
+                buf[:, cols] += a * mat
+                # a row's FIRST evidence for a column: full value, not an
+                # alpha-scaled ramp-up from a zero it never reported
+                fresh = ~self._seen[:, cols]            # (W, n_cols)
+                if fresh.any():
+                    sub = buf[:, cols]
+                    sub[fresh] = mat[fresh]
+                    buf[:, cols] = sub
+                    self._seen[:, cols] = True
+        else:
+            rows = np.flatnonzero(present)
+            buf[rows] *= (1.0 - a)
+            if cols.size and rows.size:
+                m = mat.astype(np.float32, copy=False)[rows]
+                ix = np.ix_(rows, cols)
+                sub = buf[ix]
+                sub += a * m
+                # per-row first-seen: a worker absent when the column first
+                # appeared initializes at full value on ITS first evidence
+                # (absent rows stay zero + unseen: beta 0 = "never on that
+                # worker's critical path", like any missing function)
+                fresh = ~self._seen[ix]
+                if fresh.any():
+                    sub[fresh] = m[fresh]
+                self._seen[ix] = True
+                buf[ix] = sub
         self.n_windows += 1
         return self
 

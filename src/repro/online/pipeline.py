@@ -16,13 +16,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.detector import DetectorConfig, Trigger
 from repro.core.localizer import Abnormality
-from repro.core.report import Diagnosis, build_report, format_report
+from repro.core.report import (Diagnosis, build_report, format_report,
+                               format_transport)
 from repro.core.service import PerfTrackerService
 from repro.online.ema import EmaPatternAggregator
 from repro.online.escalation import EscalationPolicy
@@ -43,12 +44,19 @@ class WindowReport:
     pattern_bytes: int
     summarize_s: float
     localize_s: float
+    #: workers whose evidence arrived this window (None = full fleet)
+    present: Optional[np.ndarray] = None
+    #: wire-transport counters for this window (None off the wire)
+    transport: Optional[Dict[str, object]] = None
 
     def functions(self) -> List[str]:
         return [d.abnormality.function for d in self.diagnoses]
 
     def report(self, fleet_size: int) -> str:
-        return format_report(self.diagnoses, fleet_size)
+        out = format_report(self.diagnoses, fleet_size)
+        if self.transport is not None:
+            out += "\n" + format_transport(self.transport)
+        return out
 
 
 class OnlinePipeline:
@@ -113,16 +121,63 @@ class OnlinePipeline:
         return self.escalation.rates() if self.escalation else None
 
     def window_tick(self, profiles, t: Optional[float] = None,
-                    rates: Optional[np.ndarray] = None) -> WindowReport:
-        """Fold one fleet of raw profiling windows into the online state."""
+                    rates: Optional[np.ndarray] = None,
+                    present_workers: Optional[Sequence[int]] = None
+                    ) -> WindowReport:
+        """Fold one fleet of raw profiling windows into the online state.
+
+        ``present_workers`` maps a PARTIAL profile list to global fleet
+        rows (``present_workers[i]`` is ``profiles[i]``'s worker id):
+        absent workers' EMA rows freeze instead of decaying on a window
+        they never reported (DESIGN.md §8)."""
+        t0 = time.perf_counter()
+        present = None
+        if present_workers is not None:
+            ids = np.asarray(list(present_workers), np.int64)
+            fs = summarize_fleet(profiles,
+                                 backend=self.service.summarize_backend,
+                                 workers=ids, fleet_size=self.n_workers)
+            present = np.zeros(self.n_workers, bool)
+            present[ids] = True
+        else:
+            fs = summarize_fleet(profiles,
+                                 backend=self.service.summarize_backend)
+        self.ema.fold(fs.agg, present=present)
+        summarize_s = time.perf_counter() - t0
+        return self._finish_tick(
+            t=t, rates=rates, present=present,
+            raw_bytes=sum(p.raw_size_bytes() for p in profiles),
+            pattern_bytes=fs.pattern_bytes, summarize_s=summarize_s)
+
+    def window_tick_batch(self, batch, t: Optional[float] = None,
+                          rates: Optional[np.ndarray] = None
+                          ) -> WindowReport:
+        """Fold one assembled wire window (``transport.WindowBatch``) into
+        the online state — the cross-process twin of ``window_tick``.
+
+        Uploads address EMA rows by worker id; workers whose upload was
+        dropped (backpressure, loss) keep their previous smoothed pattern,
+        and the batch's transport counters surface in the report."""
+        t0 = time.perf_counter()
+        uploads = batch.sorted_uploads()
+        agg, present = self.service.aggregate_batch(uploads, self.n_workers)
+        self.ema.fold(agg, present=present)
+        summarize_s = time.perf_counter() - t0
+        return self._finish_tick(
+            t=t, rates=rates, present=present,
+            raw_bytes=sum(u.raw_bytes for u in uploads),
+            pattern_bytes=sum(len(u.payload) for u in uploads),
+            summarize_s=summarize_s, transport=batch.stats())
+
+    def _finish_tick(self, t: Optional[float], rates, present,
+                     raw_bytes: int, pattern_bytes: int, summarize_s: float,
+                     transport: Optional[Dict[str, object]] = None
+                     ) -> WindowReport:
+        """Shared tail of every tick flavor: localize on the smoothed
+        patterns, advance incidents, retune escalation."""
         if t is None:
             t = float(len(self.windows))
-        t0 = time.perf_counter()
-        fs = summarize_fleet(profiles,
-                             backend=self.service.summarize_backend)
-        self.ema.fold(fs.agg)
         pats, kinds = self.ema.finalize()
-        summarize_s = time.perf_counter() - t0
         t1 = time.perf_counter()
         abn: List[Abnormality] = self.service.localizer.localize(pats, kinds)
         diagnoses = build_report(abn, self.n_workers)
@@ -134,9 +189,9 @@ class OnlinePipeline:
         report = WindowReport(
             index=len(self.windows), t=t, diagnoses=diagnoses,
             changed=changed, escalated=escalated, rates=rates,
-            raw_bytes=sum(p.raw_size_bytes() for p in profiles),
-            pattern_bytes=fs.pattern_bytes,
-            summarize_s=summarize_s, localize_s=localize_s)
+            raw_bytes=raw_bytes, pattern_bytes=pattern_bytes,
+            summarize_s=summarize_s, localize_s=localize_s,
+            present=present, transport=transport)
         self.windows.append(report)
         return report
 

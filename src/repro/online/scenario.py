@@ -19,17 +19,29 @@ Every window the runner
 Overlapping schedules exercise the distinct-incident path: the detector
 only fires once at job level, but each fault's abnormal *function* gets its
 own incident.
+
+``run_multiprocess`` is the same loop across REAL process boundaries
+(DESIGN.md §8): ``n_procs`` spawned worker processes each run a
+``PerfTrackerDaemon`` + simulator over their slice of the fleet and upload
+~KB patterns over the wire transport; the parent runs detection, window
+assembly (loss-tolerant), localization, and incident lifecycles.
 """
 from __future__ import annotations
 
+import multiprocessing as mp
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import faults as F
 from repro.core.detector import DetectorConfig
 from repro.core.simulation import FleetSimulator, SimConfig
 from repro.online.escalation import EscalationPolicy
 from repro.online.pipeline import OnlinePipeline, WindowReport
+
+#: per-window profile seed offset (must match _mp_worker_main)
+_WINDOW_SEED_STRIDE = 7919
 
 
 @dataclass(frozen=True)
@@ -47,6 +59,21 @@ class ScenarioResult:
     pipeline: OnlinePipeline
     reports: List[WindowReport]
     spans: List[Tuple[float, float]]   # (t_start, t_end) per window
+
+    def wire_summary(self) -> Optional[dict]:
+        """Aggregate transport counters over the run (None for in-process
+        runs): delivered/dropped/duplicate uploads and per-window holes."""
+        stats = [r.transport for r in self.reports if r.transport]
+        if not stats:
+            return None
+        return {
+            "windows": len(stats),
+            "delivered": sum(s["present"] for s in stats),
+            "expected": sum(s["expected"] for s in stats),
+            "duplicates": sum(s["duplicates"] for s in stats),
+            "client_dropped": max(s["client_dropped"] for s in stats),
+            "partial_windows": sum(1 for s in stats if s["missing"]),
+        }
 
     def window_of(self, t: float) -> int:
         """Map a timeline instant (e.g. an incident transition time) to the
@@ -105,6 +132,9 @@ class ScenarioRunner:
     def faults_at(self, window: int) -> List[F.Fault]:
         return [sf.fault for sf in self.schedule if sf.active(window)]
 
+    def _window_seed(self, window: int) -> int:
+        return self.sim_cfg.seed + _WINDOW_SEED_STRIDE * (window + 1)
+
     def run(self, verbose: bool = False) -> ScenarioResult:
         reports: List[WindowReport] = []
         spans: List[Tuple[float, float]] = []
@@ -116,7 +146,7 @@ class ScenarioRunner:
             self.pipeline.poll_blockage(self.sim.anchor_clock)
             rates = self.pipeline.rates()
             profiles = self.sim.profile_window(
-                rates=rates, seed=self.sim_cfg.seed + 7919 * (i + 1))
+                rates=rates, seed=self._window_seed(i))
             report = self.pipeline.window_tick(
                 profiles, t=self.sim.anchor_clock, rates=rates)
             spans.append((t0, self.sim.anchor_clock))
@@ -128,3 +158,133 @@ class ScenarioRunner:
                 print(report.report(self.sim_cfg.n_workers))
         return ScenarioResult(pipeline=self.pipeline, reports=reports,
                               spans=spans)
+
+    def run_multiprocess(self, n_procs: int = 4, loss: float = 0.0,
+                         loss_seed: Optional[int] = None,
+                         window_timeout: float = 60.0,
+                         log_path: Optional[str] = None,
+                         max_queue: int = 64,
+                         verbose: bool = False) -> ScenarioResult:
+        """The same scenario across REAL process boundaries (DESIGN.md §8).
+
+        Spawns ``n_procs`` worker processes (``multiprocessing`` spawn
+        context — a cold interpreter each, like a real per-host daemon).
+        Each runs one ``PerfTrackerDaemon`` per fleet worker in its slice:
+        per-window it materializes its workers' raw profiles, summarizes
+        locally, and uploads ~KB patterns over its own socket.  The parent
+        runs the anchor stream/detector, broadcasts ``window_start``
+        control frames (carrying the escalation rates), assembles each
+        window loss-tolerantly, and ticks the online pipeline on the
+        batches.
+
+        ``loss`` injects that fraction of upload-frame drops at the
+        framing layer in every child (deterministic per (worker, window)
+        via ``loss_seed``) — the collector's partial-window semantics and
+        the EMA's frozen-row policy carry diagnosis through the holes.
+        """
+        from repro.transport import DaemonServer, WindowCollector
+        from repro.transport import framing
+        backend = self.pipeline.service.summarize_backend
+        if backend is not None and not isinstance(backend, str):
+            raise ValueError("run_multiprocess needs a picklable backend "
+                             "name (str or None), got an instance")
+        W = self.sim_cfg.n_workers
+        n_procs = max(1, min(int(n_procs), W))
+        slices = np.array_split(np.arange(W), n_procs)
+        collector = WindowCollector(range(W))
+        server = DaemonServer(collector, log_path=log_path).start()
+        ctx = mp.get_context("spawn")
+        procs = [
+            ctx.Process(
+                target=_mp_worker_main,
+                args=(server.address, [int(w) for w in sl], self.sim_cfg,
+                      self.schedule, _WINDOW_SEED_STRIDE, float(loss),
+                      (self.sim_cfg.seed if loss_seed is None
+                       else int(loss_seed)),
+                      backend, int(max_queue)),
+                daemon=True)
+            for sl in slices if len(sl)]
+        reports: List[WindowReport] = []
+        spans: List[Tuple[float, float]] = []
+        try:
+            for p in procs:
+                p.start()
+            if not server.wait_connections(W, timeout=window_timeout):
+                raise RuntimeError(
+                    f"only {server.n_connections}/{W} daemons connected "
+                    f"within {window_timeout}s (see {log_path or 'log'})")
+            for i in range(self.n_windows):
+                self.sim.faults = self.faults_at(i)
+                t0 = self.sim.anchor_clock
+                anchors = self.sim.anchor_events(self.iters_per_window,
+                                                 t0=t0)
+                self.pipeline.feed_anchors(anchors)
+                self.pipeline.poll_blockage(self.sim.anchor_clock)
+                rates = self.pipeline.rates()
+                server.broadcast(framing.window_start_msg(i, rates))
+                batch = collector.wait_window(i, timeout=window_timeout)
+                server.log(f"window {i} assembled: {len(batch.uploads)}/"
+                           f"{W} uploads, missing={batch.missing}, "
+                           f"dups={batch.duplicates}")
+                report = self.pipeline.window_tick_batch(
+                    batch, t=self.sim.anchor_clock, rates=rates)
+                spans.append((t0, self.sim.anchor_clock))
+                reports.append(report)
+                if verbose:
+                    print(f"-- window {i} (t={report.t:.1f}s, "
+                          f"present={len(batch.uploads)}/{W}, "
+                          f"escalated={report.escalated})")
+                    print(report.report(W))
+        finally:
+            server.broadcast(framing.stop_msg())
+            started = [p for p in procs if p.pid is not None]
+            for p in started:
+                p.join(timeout=30)
+            for p in started:
+                if p.is_alive():          # wedged child: don't hang the CI
+                    p.terminate()
+                    p.join(timeout=5)
+            server.stop()
+        return ScenarioResult(pipeline=self.pipeline, reports=reports,
+                              spans=spans)
+
+
+def _mp_worker_main(address, worker_ids, sim_cfg, schedule,
+                    seed_stride, loss, loss_seed, backend,
+                    max_queue) -> None:
+    """Entry point of one spawned worker process: daemons for a fleet
+    slice, driven by the parent's ``window_start`` broadcasts."""
+    from repro.core.daemon import PerfTrackerDaemon
+    frame_filter = None
+    if loss > 0.0:
+        def frame_filter(msg, frame):
+            if msg.get("t") != "upload":
+                return None
+            r = np.random.default_rng(
+                (loss_seed, int(msg["worker"]), int(msg["window"])))
+            return [] if r.random() < loss else None
+    sim = FleetSimulator(sim_cfg, [])
+    daemons = [PerfTrackerDaemon(int(w), address, backend=backend,
+                                 max_queue=max_queue,
+                                 frame_filter=frame_filter)
+               for w in worker_ids]
+    control = daemons[0]
+    try:
+        while True:
+            msg = control.recv_control(timeout=120.0)
+            if msg is None or msg.get("t") == "stop":
+                return
+            if msg.get("t") != "window_start":
+                continue
+            i = int(msg["window"])
+            rates = msg.get("rates")
+            rates = None if rates is None else np.asarray(rates, np.float64)
+            sim.faults = [sf.fault for sf in schedule if sf.active(i)]
+            seed = sim_cfg.seed + seed_stride * (i + 1)
+            profiles = sim.profile_window_slice(worker_ids, rates=rates,
+                                                seed=seed)
+            for d, p in zip(daemons, profiles):
+                d.process_window(i, p)
+    finally:
+        for d in daemons:
+            d.close()

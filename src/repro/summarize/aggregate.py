@@ -81,6 +81,41 @@ class PatternAggregator:
                              "reserve_workers/intern first")
         self._buf[row0:row0 + Wb, :Fb] = block
 
+    def scatter_rows(self, rows: np.ndarray, block: np.ndarray) -> None:
+        """Write a dense (Wb, Fb, 3) block at explicit (non-contiguous)
+        reserved rows — the partial-fleet scatter target: a wire window
+        missing workers lands its present rows without renumbering them."""
+        rows = np.asarray(rows, np.int64)
+        Wb, Fb = block.shape[0], block.shape[1]
+        if rows.shape != (Wb,):
+            raise ValueError(f"rows {rows.shape} must match block rows {Wb}")
+        if (rows.size and (int(rows.min()) < 0
+                           or int(rows.max()) >= self._n_workers)) \
+                or Fb > self._buf.shape[1]:
+            raise ValueError("scatter_rows outside reserved buffer (rows "
+                             "must be non-negative — negative indices would "
+                             "wrap): call reserve_workers/intern first")
+        self._buf[rows, :Fb] = block
+
+    def set_row(self, row: int, pats: Dict[str, np.ndarray],
+                kinds: Optional[Dict[str, Kind]] = None) -> int:
+        """Scatter one worker's patterns at an explicit reserved row (the
+        wire collector's entry: uploads address rows by worker id, and a
+        partial window simply leaves absent rows at zero)."""
+        if not 0 <= row < self._n_workers:
+            raise ValueError(f"row {row} outside reserved "
+                             f"[0, {self._n_workers})")
+        kinds = kinds or {}
+        for name, p in pats.items():
+            j = self._intern(name, kinds.get(name))
+            self._buf[row, j] = p
+        return row
+
+    def add_upload_at(self, upload, row: int) -> int:
+        """Unpack one ``PatternUpload`` into an explicit reserved row."""
+        pats, kinds = upload.unpack()
+        return self.set_row(row, pats, kinds)
+
     # -- streaming ---------------------------------------------------------
     def add_patterns(self, pats: Dict[str, np.ndarray],
                      kinds: Optional[Dict[str, Kind]] = None) -> int:

@@ -60,7 +60,7 @@ class NumpyBackend:
 
     name = "numpy"
 
-    def __init__(self, mass_fraction: float = None):
+    def __init__(self, mass_fraction: float | None = None):
         self.mass_fraction = mass_fraction
 
     def _mass_fraction(self) -> float:

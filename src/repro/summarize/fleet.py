@@ -87,6 +87,8 @@ class FleetBatch:
     cols_w: List[np.ndarray]  # per worker: local fid -> aggregator column
     agg: PatternAggregator
     base: int                # first aggregator row of this fleet
+    rows: Optional[np.ndarray] = None  # explicit aggregator rows (partial
+    #                                    fleets: profile i -> row rows[i])
 
 
 @dataclass
@@ -222,14 +224,40 @@ def _route_rows(profiles: Sequence[WorkerProfile], ev: FleetEvents,
 
 def pack_fleet(profiles: Sequence[WorkerProfile],
                kind_of: Optional[Dict[str, Kind]] = None,
-               agg: Optional[PatternAggregator] = None) -> FleetBatch:
+               agg: Optional[PatternAggregator] = None,
+               workers: Optional[Sequence[int]] = None,
+               fleet_size: Optional[int] = None) -> FleetBatch:
     """Pack all W workers into per-(rate, length-bucket) ragged batches and
     intern every function into ``agg``'s columns (worker order, so
-    first-seen kinds match the streaming upload path)."""
+    first-seen kinds match the streaming upload path).
+
+    ``workers``/``fleet_size`` is the partial-fleet path (wire transport,
+    DESIGN.md §8): ``profiles`` covers only the workers whose windows
+    arrived, ``workers[i]`` is profile i's GLOBAL worker id, and the
+    aggregator reserves the full ``fleet_size`` rows — absent workers keep
+    zero rows instead of renumbering the fleet."""
     W = len(profiles)
+    rows: Optional[np.ndarray] = None
+    if workers is not None:
+        rows = np.asarray(list(workers), np.int64)
+        if rows.shape != (W,):
+            raise ValueError(f"workers {rows.shape} must map each of the "
+                             f"{W} profiles to its fleet row")
+        n_rows = int(fleet_size if fleet_size is not None
+                     else (rows.max() + 1 if W else 0))
+        if W and not (0 <= int(rows.min())
+                      and int(rows.max()) < n_rows):
+            raise ValueError(
+                f"worker ids [{int(rows.min())}, {int(rows.max())}] "
+                f"outside fleet [0, {n_rows}) — negative ids would "
+                "silently wrap into another worker's row")
+    else:
+        n_rows = W
     if agg is None:
-        agg = PatternAggregator(expected_workers=max(1, W))
-    base = agg.reserve_workers(W)
+        agg = PatternAggregator(expected_workers=max(1, n_rows))
+    base = agg.reserve_workers(n_rows)
+    if rows is not None:
+        rows = base + rows
     ev = extract_events(profiles)
 
     # resolve_kinds semantics without a per-event pass: one reversed flat
@@ -275,23 +303,28 @@ def pack_fleet(profiles: Sequence[WorkerProfile],
                                         lengths=lengths[sel], rows=sel))
                 lo = cap
     return FleetBatch(events=ev, groups=groups, col=col, cols_w=cols_w,
-                      agg=agg, base=base)
+                      agg=agg, base=base, rows=rows)
 
 
 def summarize_fleet(profiles: Sequence[WorkerProfile],
                     kind_of: Optional[Dict[str, Kind]] = None,
                     backend=None,
-                    agg: Optional[PatternAggregator] = None) -> FleetSummary:
+                    agg: Optional[PatternAggregator] = None,
+                    workers: Optional[Sequence[int]] = None,
+                    fleet_size: Optional[int] = None) -> FleetSummary:
     """The fleet-batched equivalent of W ``summarize_and_upload`` calls.
 
     Returns a ``FleetSummary`` whose aggregator holds the same ``(W, F, 3)``
     pattern block the streaming upload path would have produced, without
-    serializing anything.
+    serializing anything.  ``workers``/``fleet_size`` place a PARTIAL
+    fleet's profiles at their global rows (see ``pack_fleet``) so a wire
+    window with missing workers aggregates without renumbering.
     """
     from repro.summarize.engine import _resolve_backend, row_weights
     be: SummarizeBackend = _resolve_backend(backend)
     W = len(profiles)
-    fb = pack_fleet(profiles, kind_of, agg)
+    fb = pack_fleet(profiles, kind_of, agg, workers=workers,
+                    fleet_size=fleet_size)
     ev, agg, base = fb.events, fb.agg, fb.base
     F = agg.n_functions
     if W == 0 or F == 0:
@@ -330,7 +363,11 @@ def summarize_fleet(profiles: Sequence[WorkerProfile],
     np.minimum(beta, 1.0, out=beta)
 
     pattern_bytes = _wire_payload_bytes(ev.names_w)
-    agg.scatter_block(base, np.stack([beta, mu, sig], axis=2))
+    block = np.stack([beta, mu, sig], axis=2)
+    if fb.rows is not None:
+        agg.scatter_rows(fb.rows, block)
+    else:
+        agg.scatter_block(base, block)
     return FleetSummary(agg=agg, n_rows=n_rows, n_groups=len(fb.groups),
                         pattern_bytes=pattern_bytes)
 

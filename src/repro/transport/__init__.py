@@ -1,0 +1,17 @@
+"""Real wire transport for PerfTracker pattern uploads (DESIGN.md §8):
+length-prefixed msgpack framing over Unix/TCP sockets, per-worker clients
+with bounded drop-oldest send queues, a multiplexing collector server, and
+partial-window assembly with dedup and loss accounting."""
+from repro.transport.client import SendQueue, WireClient, connect
+from repro.transport.collector import WindowBatch, WindowCollector
+from repro.transport.framing import (FrameDecoder, MAX_FRAME_BYTES,
+                                     decode_frames, encode_frame)
+from repro.transport.loopback import LoopbackWire
+from repro.transport.server import DaemonServer
+
+__all__ = [
+    "FrameDecoder", "MAX_FRAME_BYTES", "decode_frames", "encode_frame",
+    "SendQueue", "WireClient", "connect",
+    "WindowBatch", "WindowCollector",
+    "DaemonServer", "LoopbackWire",
+]

@@ -1,0 +1,157 @@
+"""Window assembly on the collector side (DESIGN.md §8).
+
+Uploads arrive per (window, worker) over per-worker connections, in
+whatever order the wire delivers them — possibly duplicated (a retrying
+client, an injected fault) and possibly never (client-side backpressure
+drop, injected loss).  ``WindowCollector`` reassembles them into
+``WindowBatch``es with *partial-window semantics*:
+
+  * a window is COMPLETE when every expected worker has closed it with a
+    ``window_end`` frame — not when every upload arrived.  A worker whose
+    upload was dropped still ends the window (the end frame is
+    undroppable), so the collector learns about the hole immediately
+    instead of timing out on it;
+  * duplicate (window, worker) uploads keep the FIRST copy and count the
+    rest (``duplicates``);
+  * workers that never even end the window (dead process, wedged socket)
+    are bounded by the ``wait_window`` timeout and reported in
+    ``missing`` alongside the dropped ones.
+
+The batch carries everything downstream diagnosis needs to degrade
+gracefully: the present-worker set, the missing set, duplicate and
+client-side drop counters.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.transport import framing
+
+
+@dataclass
+class WindowBatch:
+    """One assembled (possibly partial) profiling window."""
+    window: int
+    expected: Tuple[int, ...]                 # worker ids owed this window
+    uploads: Dict[int, "PatternUpload"] = field(default_factory=dict)
+    ended: Set[int] = field(default_factory=set)
+    duplicates: int = 0                       # deduped (window, worker) copies
+    client_dropped: int = 0                   # cumulative backpressure drops
+    timed_out: bool = False                   # wait_window hit its deadline
+
+    @property
+    def present(self) -> List[int]:
+        """Workers whose upload arrived, ascending."""
+        return sorted(self.uploads)
+
+    @property
+    def missing(self) -> List[int]:
+        """Expected workers with no upload this window."""
+        return sorted(set(self.expected) - set(self.uploads))
+
+    @property
+    def complete(self) -> bool:
+        return not self.missing
+
+    def present_mask(self, fleet_size: int) -> np.ndarray:
+        mask = np.zeros(int(fleet_size), bool)
+        mask[self.present] = True
+        return mask
+
+    def sorted_uploads(self) -> List["PatternUpload"]:
+        return [self.uploads[w] for w in self.present]
+
+    def stats(self) -> Dict[str, object]:
+        """Transport counters for reports (DESIGN.md §8)."""
+        return {"window": self.window,
+                "expected": len(self.expected),
+                "present": len(self.uploads),
+                "missing": self.missing,
+                "duplicates": self.duplicates,
+                "client_dropped": self.client_dropped,
+                "timed_out": self.timed_out}
+
+
+class WindowCollector:
+    """Thread-safe (window, worker) -> upload reassembly."""
+
+    def __init__(self, expected_workers: Sequence[int]):
+        self.expected = tuple(sorted(int(w) for w in expected_workers))
+        self._batches: Dict[int, WindowBatch] = {}
+        #: latest cumulative drop counter per worker (from window_end)
+        self._drops: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        #: highest window index already handed out by wait_window; frames
+        #: for it (or older windows) are stragglers — counted and dropped,
+        #: never resurrected into _batches (which would leak one batch per
+        #: late upload over a long-running pipeline).  Assumes windows are
+        #: consumed in ascending order, which every driver does.
+        self._popped_through: float = float("-inf")
+        self.total_uploads = 0
+        self.total_duplicates = 0
+        self.stale_frames = 0
+
+    def _batch(self, window: int) -> WindowBatch:
+        b = self._batches.get(window)
+        if b is None:
+            b = self._batches[window] = WindowBatch(
+                window=window, expected=self.expected)
+        return b
+
+    # -- frame ingestion (called from the server's IO thread) ---------------
+    def on_message(self, msg: Dict) -> None:
+        t = msg.get("t")
+        if t == "upload":
+            window, upload = framing.msg_to_upload(msg)
+            with self._cv:
+                if window <= self._popped_through:
+                    self.stale_frames += 1
+                    return
+                b = self._batch(window)
+                if upload.worker in b.uploads:
+                    b.duplicates += 1
+                    self.total_duplicates += 1
+                else:
+                    b.uploads[upload.worker] = upload
+                    self.total_uploads += 1
+        elif t == "window_end":
+            with self._cv:
+                if int(msg["window"]) <= self._popped_through:
+                    self.stale_frames += 1
+                    return
+                b = self._batch(int(msg["window"]))
+                b.ended.add(int(msg["worker"]))
+                self._drops[int(msg["worker"])] = int(msg.get("dropped", 0))
+                if b.ended >= set(self.expected):
+                    self._cv.notify_all()
+
+    # -- consumer side -------------------------------------------------------
+    def client_dropped(self) -> int:
+        with self._lock:
+            return sum(self._drops.values())
+
+    def wait_window(self, window: int, timeout: float = 30.0) -> WindowBatch:
+        """Block until every expected worker ended ``window`` (or timeout);
+        returns the batch — partial if uploads were dropped or workers
+        never reported."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while True:
+                b = self._batch(window)
+                if b.ended >= set(self.expected):
+                    break
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    b.timed_out = True
+                    break
+                self._cv.wait(timeout=min(remaining, 0.5))
+            self._batches.pop(window, None)
+            self._popped_through = max(self._popped_through, window)
+            b.client_dropped = sum(self._drops.values())
+            return b

@@ -1,0 +1,137 @@
+"""Wire framing for PerfTracker pattern uploads (DESIGN.md §8).
+
+One frame = a 4-byte big-endian unsigned length prefix followed by exactly
+that many bytes of msgpack.  Length-prefixing (rather than delimiters) is
+what lets ~KB binary payloads — the msgpack pattern dicts the daemon
+already produces — cross the socket untouched, and what makes partial
+reads trivial to resume: a ``FrameDecoder`` buffers bytes from *any* recv
+boundary and yields only complete frames.
+
+Every frame body is a msgpack map with a ``"t"`` type tag:
+
+  ``hello``        client -> server   {worker}
+  ``upload``       client -> server   {window, worker, seq, payload,
+                                       summarize_s, raw_bytes}
+  ``window_end``   client -> server   {window, worker, sent, dropped}
+                   (cumulative counters; ``dropped`` is the client-side
+                   backpressure drop count — the collector's loss
+                   accounting rides on this frame, which is never dropped)
+  ``window_start`` server -> client   {window, rates | None, stop: False}
+  ``stop``         server -> client   {}
+  ``bye``          client -> server   {worker}
+
+The per-frame size cap rejects corrupt prefixes before they turn into a
+multi-GB allocation; real pattern uploads are ~KB (paper Fig. 11).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import msgpack
+
+#: frames above this are a protocol error (pattern uploads are ~KB; the
+#: largest legitimate frame is a window_start carrying one float per worker)
+MAX_FRAME_BYTES = 16 * 1024 * 1024
+
+_LEN = struct.Struct(">I")
+
+
+def encode_frame(msg: Dict) -> bytes:
+    """Serialize one protocol message into a length-prefixed frame."""
+    body = msgpack.packb(msg, use_bin_type=True)
+    if len(body) > MAX_FRAME_BYTES:
+        raise ValueError(f"frame body {len(body)}B exceeds "
+                         f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    return _LEN.pack(len(body)) + body
+
+
+def decode_frames(data: bytes) -> List[Dict]:
+    """Decode a byte string holding zero or more COMPLETE frames (tests /
+    one-shot paths; streaming callers use ``FrameDecoder``)."""
+    dec = FrameDecoder()
+    out = list(dec.feed(data))
+    if dec.pending_bytes:
+        raise ValueError(f"{dec.pending_bytes} trailing bytes do not form "
+                         "a complete frame")
+    return out
+
+
+class FrameDecoder:
+    """Incremental frame reassembly over an arbitrary byte stream.
+
+    ``feed`` accepts whatever one ``recv`` returned — half a length prefix,
+    three frames and a torn fourth — and yields each message exactly once,
+    as soon as its final byte arrives.
+    """
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+        self._need: Optional[int] = None     # body length once prefix parsed
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def feed(self, data: bytes) -> Iterator[Dict]:
+        self._buf += data
+        while True:
+            if self._need is None:
+                if len(self._buf) < _LEN.size:
+                    return
+                (self._need,) = _LEN.unpack_from(self._buf)
+                if self._need > MAX_FRAME_BYTES:
+                    raise ValueError(
+                        f"frame length {self._need}B exceeds "
+                        f"MAX_FRAME_BYTES={MAX_FRAME_BYTES} "
+                        "(corrupt stream?)")
+                del self._buf[:_LEN.size]
+            if len(self._buf) < self._need:
+                return
+            body = bytes(self._buf[:self._need])
+            del self._buf[:self._need]
+            self._need = None
+            yield msgpack.unpackb(body, raw=False, strict_map_key=False)
+
+
+# -- message constructors (one place defines the schema) ----------------------
+
+def hello_msg(worker: int) -> Dict:
+    return {"t": "hello", "worker": int(worker)}
+
+
+def upload_msg(window: int, upload, seq: int) -> Dict:
+    """Wrap a ``repro.core.daemon.PatternUpload`` for the wire."""
+    return {"t": "upload", "window": int(window), "worker": int(upload.worker),
+            "seq": int(seq), "payload": upload.payload,
+            "summarize_s": float(upload.summarize_s),
+            "raw_bytes": int(upload.raw_bytes)}
+
+
+def msg_to_upload(msg: Dict) -> Tuple[int, "PatternUpload"]:
+    """Inverse of ``upload_msg``: (window, PatternUpload)."""
+    from repro.core.daemon import PatternUpload   # late: avoid import cycle
+    return int(msg["window"]), PatternUpload(
+        worker=int(msg["worker"]), payload=msg["payload"],
+        summarize_s=float(msg["summarize_s"]),
+        raw_bytes=int(msg["raw_bytes"]))
+
+
+def window_end_msg(window: int, worker: int, sent: int, dropped: int) -> Dict:
+    return {"t": "window_end", "window": int(window), "worker": int(worker),
+            "sent": int(sent), "dropped": int(dropped)}
+
+
+def window_start_msg(window: int, rates=None, stop: bool = False) -> Dict:
+    return {"t": "window_start", "window": int(window),
+            "rates": (None if rates is None
+                      else [float(r) for r in rates]),
+            "stop": bool(stop)}
+
+
+def stop_msg() -> Dict:
+    return {"t": "stop"}
+
+
+def bye_msg(worker: int) -> Dict:
+    return {"t": "bye", "worker": int(worker)}
