@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: test test-wire test-cov deps lint bench bench-summarize bench-fleet \
-        bench-online bench-wire bench-gate bench-gate-update
+        bench-online bench-wire bench-mitigation bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -45,10 +45,13 @@ bench-online:
 bench-wire:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only wire_transport
 
-# the CI benchmark-regression gate: run the four gated benchmarks with the
+bench-mitigation:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only mitigation_loop
+
+# the CI benchmark-regression gate: run the five gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

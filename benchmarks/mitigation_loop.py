@@ -1,0 +1,123 @@
+"""ISSUE 5: the closed mitigation loop — windows-to-resolution across the
+six-fault matrix (DESIGN.md §9).
+
+Each case schedules one fault that the SCHEDULE NEVER REMOVES: the only
+way the incident resolves is the mitigation engine executing the correct
+plan (replace hosts + re-mesh onto standbys, migrate the dataloader,
+synchronize GC, flag code) and verification watching the signature clear.
+Per case::
+
+    mitigation/<case>_W<W>,  windows from plan application to resolved,
+                             resolved=Y/N;escalations=k;plan=<action>;
+                             windows_to_detect=d
+
+plus an aggregate row::
+
+    mitigation/matrix_W<W>,  mean windows-to-resolution,
+                             resolved=Y iff every case resolved with the
+                             expected first plan and zero escalations
+
+Everything is deterministic (seeded simulator, fixed schedule), so the CI
+gate pins a windows-to-resolution CEILING per fault and the matrix
+``resolved`` flag (benchmarks/baselines.json).
+
+Env knobs (CI smoke): ``REPRO_BENCH_MITIGATION_W`` (default 24),
+``REPRO_BENCH_MITIGATION_WINDOWS`` (default 12),
+``REPRO_BENCH_MITIGATION_CASES`` (comma-separated case names, default all
+six).
+"""
+from __future__ import annotations
+
+import os
+
+W = int(os.environ.get("REPRO_BENCH_MITIGATION_W", "24"))
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_MITIGATION_WINDOWS", "12"))
+N_STANDBY = 4
+INJECT = 2
+WINDOW_S = 1.0
+BASE_HZ, FULL_HZ = 250.0, 2000.0
+
+
+def _cases():
+    from repro.core import faults as F
+    from repro.core.mitigation import Action
+    from repro.core.simulation import (ALLGATHER, DATALOADER_STACK,
+                                       FORWARD_STACK, GC_STACK, GEMM)
+    cases = {
+        "C1P1_gpu_throttle": (F.GpuThrottle(workers=(3, W // 2 + 1)),
+                              GEMM, Action.REPLACE_HOSTS),
+        "C1P2_nvlink_down": (F.NvlinkDown(workers=[5], group_size=8),
+                             ALLGATHER, Action.REPLACE_HOSTS),
+        "S3_ring_slow_link": (F.RingSlowLink(slow_worker=9, rho=0.4),
+                              ALLGATHER, Action.REPLACE_HOSTS),
+        "C2P1_slow_dataloader": (F.SlowDataloader(), DATALOADER_STACK,
+                                 Action.MIGRATE_DATALOADER),
+        "C2P2_cpu_forward": (F.CpuBoundForward(workers=range(6)),
+                             FORWARD_STACK, Action.FLAG_CODE),
+        "C2P3_async_gc": (F.AsyncGc(probability=0.5, pause_s=0.25),
+                          GC_STACK, Action.SYNCHRONIZE_GC),
+    }
+    only = [c for c in os.environ.get("REPRO_BENCH_MITIGATION_CASES",
+                                      "").split(",") if c]
+    return {k: v for k, v in cases.items() if not only or k in only}
+
+
+def _run_case(fault):
+    from repro.core.simulation import SimConfig
+    from repro.online import (EscalationPolicy, ScenarioRunner,
+                              ScheduledFault)
+    esc = EscalationPolicy(n_workers=W + N_STANDBY, base_rate_hz=BASE_HZ,
+                           full_rate_hz=FULL_HZ,
+                           max_escalated=max(4, W // 16))
+    runner = ScenarioRunner(
+        SimConfig(n_workers=W, window_s=WINDOW_S, rate_hz=FULL_HZ, seed=5,
+                  n_standby=N_STANDBY),
+        [ScheduledFault(fault, INJECT, N_WINDOWS)],   # never removed
+        n_windows=N_WINDOWS, escalation=esc, mitigation=True)
+    return runner, runner.run()
+
+
+def run():
+    rows = []
+    all_ok = True
+    resolutions = []
+    for name, (fault, expect, action) in _cases().items():
+        runner, res = _run_case(fault)
+        incs = [i for i in res.incidents if i.function == expect]
+        inc = incs[0] if incs else None
+        mine = ([m for m in runner.engine.log
+                 if inc is not None and m.incident_id == inc.id]
+                if inc is not None else [])
+        ok = (inc is not None and inc.state == "resolved"
+              and mine and mine[0].plan.action is action
+              and inc.escalations == 0)
+        if ok:
+            apply_w = mine[0].window
+            resolved_w = res.window_of(inc.resolved_at)
+            wtr = resolved_w - apply_w
+            detect = res.window_of(inc.opened_at) - INJECT
+            resolutions.append(wtr)
+        else:
+            wtr, detect = float("nan"), float("nan")
+        all_ok = all_ok and ok
+        rows.append((
+            f"mitigation/{name}_W{W}", wtr,
+            f"windows_to_resolve;resolved={'Y' if ok else 'N'};"
+            f"escalations={inc.escalations if inc else -1};"
+            f"plan={mine[0].plan.action.value if mine else 'none'};"
+            f"windows_to_detect={detect}"))
+    mean_wtr = (sum(resolutions) / len(resolutions)
+                if resolutions else float("nan"))
+    # an empty case filter (e.g. a typo in REPRO_BENCH_MITIGATION_CASES)
+    # must not report a vacuous green matrix
+    all_ok = all_ok and bool(resolutions)
+    rows.append((
+        f"mitigation/matrix_W{W}", mean_wtr,
+        f"mean_windows_to_resolve;resolved={'Y' if all_ok else 'N'};"
+        f"cases={len(resolutions)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -22,6 +22,7 @@ MODULES = [
     ("fleet_diagnosis", "ISSUE 2: fleet-batched vs per-worker diagnosis"),
     ("online_pipeline", "ISSUE 3: online pipeline / differential escalation"),
     ("wire_transport", "ISSUE 4: wire transport throughput / p99 latency"),
+    ("mitigation_loop", "ISSUE 5: mitigation loop windows-to-resolution"),
     ("kernels_bench", "kernel micro-bench"),
     ("roofline_table", "EXPERIMENTS §Roofline (from dry-run artifacts)"),
 ]

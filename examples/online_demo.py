@@ -1,4 +1,4 @@
-"""Online incident pipeline demo (DESIGN.md §7, §8).
+"""Online incident pipeline demo (DESIGN.md §7, §8, §9).
 
 A 14-window simulated training run: GPUs on workers 3 and 11 start
 throttling at window 2; a slow-storage fault overlaps from window 4; both
@@ -7,12 +7,19 @@ implicated workers escalate to the full 2 kHz.
 
 Run:  PYTHONPATH=src python examples/online_demo.py
       PYTHONPATH=src python examples/online_demo.py --wire [--loss 0.1]
+      PYTHONPATH=src python examples/online_demo.py --mitigate
 
 ``--wire`` runs the SAME scenario across real process boundaries: 4
 spawned worker processes each run per-worker daemons over their slice of
 the fleet and upload ~KB patterns over a Unix socket (DESIGN.md §8);
 ``--loss`` injects that fraction of upload drops at the framing layer to
 show the partial-window degradation story.
+
+``--mitigate`` closes the loop (DESIGN.md §9): the schedule never removes
+the faults — instead the MitigationEngine executes each incident's ladder
+against the simulator (throttled hosts are replaced by standbys via an
+elastic re-mesh, the dataloader migrates), verification watches the
+signature clear, and every incident is driven to ``resolved``.
 """
 import argparse
 
@@ -21,19 +28,37 @@ from repro.core.simulation import SimConfig
 from repro.online import EscalationPolicy, ScenarioRunner, ScheduledFault
 
 W = 24
+N_STANDBY = 4
+N_WINDOWS = 14
 
 
-def make_runner():
-    schedule = [
-        ScheduledFault(F.GpuThrottle(workers=(3, 11)), start_window=2,
-                       end_window=8),
-        ScheduledFault(F.SlowDataloader(), start_window=4, end_window=10),
-    ]
-    escalation = EscalationPolicy(n_workers=W, base_rate_hz=250.0,
+def make_runner(mitigate: bool = False):
+    if mitigate:
+        # nothing but the engine can clear these faults
+        schedule = [
+            ScheduledFault(F.GpuThrottle(workers=(3, 11)), start_window=2,
+                           end_window=N_WINDOWS),
+            ScheduledFault(F.SlowDataloader(), start_window=4,
+                           end_window=N_WINDOWS),
+        ]
+        n_standby = N_STANDBY
+    else:
+        schedule = [
+            ScheduledFault(F.GpuThrottle(workers=(3, 11)), start_window=2,
+                           end_window=8),
+            ScheduledFault(F.SlowDataloader(), start_window=4,
+                           end_window=10),
+        ]
+        n_standby = 0
+    escalation = EscalationPolicy(n_workers=W + n_standby,
+                                  base_rate_hz=250.0,
                                   full_rate_hz=2000.0, max_escalated=8)
-    return ScenarioRunner(
-        SimConfig(n_workers=W, window_s=1.0, rate_hz=2000.0, seed=5),
-        schedule, n_windows=14, escalation=escalation), schedule
+    runner = ScenarioRunner(
+        SimConfig(n_workers=W, window_s=1.0, rate_hz=2000.0, seed=5,
+                  n_standby=n_standby),
+        schedule, n_windows=N_WINDOWS, escalation=escalation,
+        mitigation=mitigate)
+    return runner, schedule
 
 
 def main() -> None:
@@ -44,9 +69,15 @@ def main() -> None:
     ap.add_argument("--loss", type=float, default=0.0,
                     help="with --wire: fraction of upload frames dropped at "
                          "the framing layer")
+    ap.add_argument("--mitigate", action="store_true",
+                    help="execute mitigation plans against the simulator "
+                         "and verify recovery (DESIGN.md §9)")
     args = ap.parse_args()
+    if args.wire and args.mitigate:
+        ap.error("--mitigate is in-process only (cures cannot yet be "
+                 "broadcast to spawned daemons)")
 
-    runner, schedule = make_runner()
+    runner, schedule = make_runner(mitigate=args.mitigate)
     if args.wire:
         result = runner.run_multiprocess(n_procs=4, loss=args.loss)
     else:
@@ -54,11 +85,12 @@ def main() -> None:
 
     print("=== per-window reports " + "=" * 40)
     for rep in result.reports:
-        faults = [type(f.fault).__name__ for f in schedule
-                  if f.active(rep.index)]
+        faults = [type(f).__name__ for f in runner.faults_at(rep.index)]
         print(f"\n-- window {rep.index:2d}  t={rep.t:7.1f}s  "
               f"faults={faults or ['-']}  escalated={rep.escalated or '-'}  "
               f"raw={rep.raw_bytes / 1e6:.1f}MB")
+        for m in rep.mitigations:
+            print(f"   ENGINE: {m}")
         print(rep.report(W))
 
     wire = result.wire_summary()
@@ -71,6 +103,12 @@ def main() -> None:
 
     print("\n=== incident timeline " + "=" * 41)
     print(result.timeline())
+
+    if args.mitigate:
+        print("\n=== fleet after mitigation " + "=" * 36)
+        active = runner.sim.active_workers
+        print(f"active workers ({len(active)}): {active}")
+        print(f"standbys left: {runner.sim.standbys}")
 
     print("\n=== cost " + "=" * 54)
     total = sum(r.raw_bytes for r in result.reports)

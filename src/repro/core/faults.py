@@ -1,9 +1,15 @@
 """Fault models injected into the fleet simulator — one per production case
-the paper diagnoses (§3, §6.1, §6.2)."""
+the paper diagnoses (§3, §6.1, §6.2).
+
+``affected_workers`` / ``remap_workers`` are the hooks the mitigation
+engine (DESIGN.md §9) uses to reason about host replacement: which workers
+a fault is pinned to, and where a rank-pinned fault lands after an elastic
+re-mesh moves its ranks onto standby hosts.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Sequence
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -57,3 +63,50 @@ class AsyncGc(Fault):
     iterations in non-CPU-intensive Python frames; peers wait."""
     probability: float = 0.15
     pause_s: float = 0.25
+
+
+def affected_workers(f: Fault) -> Optional[frozenset]:
+    """The worker set a fault is pinned to, or None for fleet-wide faults
+    (slow storage, unsynchronized GC, fleet-wide CPU-bound forward): those
+    cannot be cured or dodged by replacing hosts."""
+    if isinstance(f, (GpuThrottle, NvlinkDown)):
+        return frozenset(int(w) for w in f.workers)
+    if isinstance(f, CpuBoundForward):
+        if not f.workers:
+            return None
+        return frozenset(int(w) for w in f.workers)
+    if isinstance(f, RingSlowLink):
+        return frozenset({int(f.slow_worker)})
+    return None
+
+
+def remap_workers(f: Fault, mapping: Dict[int, Optional[int]]
+                  ) -> Optional[Fault]:
+    """Re-pin a worker-pinned fault through a replace-hosts mapping
+    (dropped worker -> standby id, or None when no standby was left).
+
+    Returns the same object when nothing changes, a new Fault on the
+    remapped workers, or None when every pinned worker dropped out of the
+    fleet without replacement (the fault has nowhere left to manifest).
+    Fleet-wide faults and ``RingSlowLink`` (the degraded NIC bond stays
+    where it is) are returned unchanged.
+    """
+    if isinstance(f, (GpuThrottle, NvlinkDown, CpuBoundForward)):
+        if not f.workers:
+            return f
+        new = []
+        changed = False
+        for w in f.workers:
+            w = int(w)
+            if w in mapping:
+                changed = True
+                if mapping[w] is not None:
+                    new.append(int(mapping[w]))
+            else:
+                new.append(w)
+        if not changed:
+            return f
+        if not new:
+            return None
+        return replace(f, workers=tuple(new))
+    return f

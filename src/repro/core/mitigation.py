@@ -1,18 +1,29 @@
 """Mitigation hooks: PerfTracker's localization output drives the
-fault-tolerance machinery (DESIGN.md §4) — the paper's observability becomes
-the cluster's straggler/failure sensor.
+fault-tolerance machinery (DESIGN.md §4, §9) — the paper's observability
+becomes the cluster's straggler/failure sensor.
 
 Actions map 1:1 to what the paper's operators did (§6): replace flagged
 hosts (checkpoint-now + elastic re-mesh without them), move data loading,
 synchronize GC, flag code for optimization.
+
+Two entry points:
+
+  * ``plan_ladder(diagnosis)``     — a RANKED ladder of plans for one
+    diagnosis: rung 0 is the playbook's best first move, later rungs are
+    what an operator tries when verification shows the signature survived
+    the previous rung (e.g. flag-code first, replace the hosts when the
+    "software" problem follows the hardware).  The online mitigation
+    engine (``repro.online.mitigation``) executes ladders rung by rung and
+    escalates on failed verification.
+  * ``plan_mitigations(diagnoses)`` — the flat batch view: the first rung
+    of every diagnosis's ladder, with REPLACE_HOSTS plans merged into one
+    fleet operation (one checkpoint + one re-mesh, not one per diagnosis).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import List, Sequence
-
-import numpy as np
 
 from repro.core.events import Kind
 from repro.core.report import Diagnosis
@@ -34,29 +45,117 @@ class MitigationPlan:
     detail: str = ""
 
 
-def plan_mitigations(diagnoses: Sequence[Diagnosis], fleet_size: int
-                     ) -> List[MitigationPlan]:
-    plans: List[MitigationPlan] = []
-    bad_hosts: set = set()
-    for d in diagnoses:
-        a = d.abnormality
-        frac = len(a.workers) / max(1, fleet_size)
-        if a.kind in (Kind.GPU, Kind.COMM) and frac < 0.5:
-            bad_hosts.update(a.workers.tolist())
-        elif a.kind == Kind.PYTHON:
-            if "socket" in a.function or "dataloader" in a.function:
-                plans.append(MitigationPlan(
+def plan_ladder(d: Diagnosis, fleet_size: int) -> List[MitigationPlan]:
+    """Ranked mitigation ladder for ONE diagnosis.
+
+    Rung 0 is the paper-§6 playbook's first move for the diagnosed
+    pattern; each later rung is the escalation an operator reaches for
+    when the signature survives verification of the rung before it.
+    """
+    a = d.abnormality
+    frac = len(a.workers) / max(1, fleet_size)
+    ws = sorted(int(w) for w in a.workers)
+
+    if a.kind in (Kind.GPU, Kind.COMM):
+        if frac >= 0.5:
+            # widespread hardware abnormality: replacing half the fleet is
+            # not a plan — checkpoint immediately and flag the fabric /
+            # topology for investigation (regression: this used to fall
+            # through to Action.NONE)
+            return [MitigationPlan(
+                Action.CHECKPOINT_NOW, [],
+                f"{a.kind.name} abnormality on {frac:.0%} of the fleet: "
+                "checkpoint now, flag fabric/topology for investigation")]
+        ladder = [MitigationPlan(
+            Action.REPLACE_HOSTS, ws,
+            "checkpoint-now, drop flagged hosts, elastic re-mesh on "
+            "standbys (see repro.ckpt + launch.train --elastic)")]
+        if a.kind == Kind.GPU:
+            ladder.append(MitigationPlan(
+                Action.FLAG_CODE, ws,
+                f"persists across host replacement -> suspect software; "
+                f"optimize {a.function}"))
+        else:
+            ladder.append(MitigationPlan(
+                Action.CHECKPOINT_NOW, [],
+                "persists across host replacement -> checkpoint and page "
+                "network/topology on-call"))
+        return ladder
+
+    if a.kind == Kind.PYTHON:
+        if "socket" in a.function or "dataloader" in a.function:
+            return [
+                MitigationPlan(
                     Action.MIGRATE_DATALOADER, [],
-                    "move input data to the parallel file system"))
-            elif "gc" in d.hint or "garbage" in d.hint:
-                plans.append(MitigationPlan(
+                    "move input data to the parallel file system"),
+                MitigationPlan(
+                    Action.FLAG_CODE, ws,
+                    "storage migration did not clear it -> optimize the "
+                    "input pipeline itself"),
+            ]
+        if "gc" in d.hint or "garbage" in d.hint:
+            return [
+                MitigationPlan(
                     Action.SYNCHRONIZE_GC, [],
                     "manually collect garbage every K iterations on all "
-                    "workers"))
-            else:
-                plans.append(MitigationPlan(
-                    Action.FLAG_CODE, a.workers.tolist(),
-                    f"optimize {a.function}"))
+                    "workers"),
+                MitigationPlan(
+                    Action.FLAG_CODE, ws,
+                    f"synchronized GC did not clear it -> optimize "
+                    f"{a.function}"),
+            ]
+        # generic slow Python frame: flag the code first; when the
+        # "software" problem follows the flagged hosts, replace them
+        ladder = [MitigationPlan(Action.FLAG_CODE, ws,
+                                 f"optimize {a.function}")]
+        if ws and frac < 0.5:
+            ladder.append(MitigationPlan(
+                Action.REPLACE_HOSTS, ws,
+                "optimization did not clear it and only these hosts are "
+                "implicated -> replace them"))
+        else:
+            ladder.append(MitigationPlan(
+                Action.CHECKPOINT_NOW, [],
+                "fleet-wide slow Python frame persists -> checkpoint and "
+                "hand to an operator"))
+        return ladder
+
+    if a.kind == Kind.MEM:
+        # explicit non-GPU/COMM/PYTHON handling (used to fall through)
+        return [MitigationPlan(
+            Action.FLAG_CODE, ws,
+            f"host/device copy bottleneck in {a.function}: batch or "
+            "overlap transfers")]
+
+    return [MitigationPlan(
+        Action.CHECKPOINT_NOW, [],
+        f"unclassified abnormality kind {a.kind!r} in {a.function}: "
+        "checkpoint and hand to an operator")]
+
+
+def plan_mitigations(diagnoses: Sequence[Diagnosis], fleet_size: int
+                     ) -> List[MitigationPlan]:
+    """First rung of every diagnosis's ladder, REPLACE_HOSTS merged.
+
+    Host replacement is one fleet operation (a single checkpoint + elastic
+    re-mesh drops every flagged host at once), so REPLACE_HOSTS rungs from
+    different diagnoses merge into one leading plan; other plans keep
+    diagnosis order, with exact duplicates (same action + workers)
+    dropped.
+    """
+    plans: List[MitigationPlan] = []
+    seen = set()
+    bad_hosts: set = set()
+    for d in diagnoses:
+        head = plan_ladder(d, fleet_size)[0]
+        if head.action is Action.REPLACE_HOSTS:
+            bad_hosts.update(head.workers)
+            continue
+        key = (head.action, tuple(head.workers))
+        if key in seen:
+            continue
+        seen.add(key)
+        plans.append(head)
     if bad_hosts:
         plans.insert(0, MitigationPlan(
             Action.REPLACE_HOSTS, sorted(bad_hosts),
@@ -65,3 +164,15 @@ def plan_mitigations(diagnoses: Sequence[Diagnosis], fleet_size: int
     if not plans:
         plans.append(MitigationPlan(Action.NONE))
     return plans
+
+
+def format_plans(plans: Sequence[MitigationPlan]) -> str:
+    """One line per plan, for reports and demos."""
+    if not plans:
+        return "mitigation: none"
+    lines = []
+    for p in plans:
+        ws = f" workers={p.workers}" if p.workers else ""
+        detail = f" — {p.detail}" if p.detail else ""
+        lines.append(f"mitigation: {p.action.value}{ws}{detail}")
+    return "\n".join(lines)

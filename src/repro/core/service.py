@@ -34,6 +34,8 @@ from repro.core.detector import DetectorConfig, IterationDetector, Trigger
 from repro.core.daemon import PatternUpload, summarize_and_upload
 from repro.core.events import Kind, WorkerProfile
 from repro.core.localizer import Localizer
+from repro.core.mitigation import (MitigationPlan, format_plans,
+                                   plan_mitigations)
 from repro.core.report import (Diagnosis, build_report, format_report,
                                format_transport)
 from repro.summarize.aggregate import PatternAggregator
@@ -52,11 +54,21 @@ class DiagnosisResult:
     #: present/missing workers, dedup and client-side drop counts
     transport: Optional[Dict[str, object]] = field(default=None)
 
-    def report(self) -> str:
+    def report(self, mitigation: bool = False) -> str:
+        """Fig.-7 report; ``mitigation=True`` appends the suggested plans
+        (first rung of each diagnosis's ladder, DESIGN.md §9)."""
         out = format_report(self.diagnoses, self.fleet_size)
         if self.transport is not None:
             out += "\n" + format_transport(self.transport)
+        if mitigation and self.diagnoses:
+            out += "\n" + format_plans(self.suggested_plans())
         return out
+
+    def suggested_plans(self) -> List[MitigationPlan]:
+        """Flat batch mitigation view of this diagnosis
+        (``plan_mitigations``: merged REPLACE_HOSTS + per-diagnosis first
+        rungs)."""
+        return plan_mitigations(self.diagnoses, self.fleet_size)
 
     def functions(self) -> List[str]:
         return [d.abnormality.function for d in self.diagnoses]

@@ -42,6 +42,10 @@ class SimConfig:
     dp_group_size: int = 16
     seed: int = 0
     family: str = "dense"
+    #: cold-spare hosts (ids n_workers..n_workers+n_standby-1) that start
+    #: inactive and join the fleet when ``replace_hosts`` re-meshes onto
+    #: them (DESIGN.md §9)
+    n_standby: int = 0
 
 
 class FleetSimulator:
@@ -51,6 +55,40 @@ class FleetSimulator:
         self.rng = np.random.default_rng(cfg.seed)
         #: end of the last anchor_events span (continuous-timeline cursor)
         self.anchor_clock = 0.0
+        #: workers currently in the training mesh; standbys start outside
+        self.active = list(range(cfg.n_workers))
+        self.standbys = list(range(cfg.n_workers,
+                                   cfg.n_workers + cfg.n_standby))
+
+    # -- fleet membership (elastic re-mesh, DESIGN.md §9) ------------------
+    @property
+    def total_workers(self) -> int:
+        """Fleet row space: in-mesh workers + cold standbys."""
+        return self.cfg.n_workers + self.cfg.n_standby
+
+    @property
+    def active_workers(self) -> List[int]:
+        return list(self.active)
+
+    def replace_hosts(self, workers: Sequence[int]
+                      ) -> Dict[int, Optional[int]]:
+        """Drop the given workers from the mesh and re-mesh elastically:
+        each dropped worker is replaced by the next standby (None when the
+        standby pool is exhausted — the fleet simply shrinks).  Returns
+        {dropped worker -> replacement id or None}.  Dropped workers stop
+        producing profiles; downstream, the present-mask machinery
+        (DESIGN.md §8) carries diagnosis on the partial fleet."""
+        mapping: Dict[int, Optional[int]] = {}
+        for w in sorted({int(x) for x in workers}):
+            if w not in self.active:
+                continue
+            self.active.remove(w)
+            repl = self.standbys.pop(0) if self.standbys else None
+            if repl is not None:
+                self.active.append(repl)
+            mapping[w] = repl
+        self.active.sort()
+        return mapping
 
     # -- helpers ----------------------------------------------------------
     def _fault(self, kind):
@@ -58,9 +96,15 @@ class FleetSimulator:
 
     def iteration_multiplier(self) -> float:
         """Job-level slowdown factor from active faults (all workers are
-        gated by collectives, so the slowest worker sets the pace)."""
+        gated by collectives, so the slowest worker sets the pace).  A
+        fault pinned to workers that all left the mesh no longer gates
+        anything."""
         m = 1.0
+        in_mesh = set(self.active)
         for f in self.faults:
+            pinned = F.affected_workers(f)
+            if pinned is not None and not (pinned & in_mesh):
+                continue
             if isinstance(f, F.GpuThrottle):
                 m = max(m, 1 + 0.45 * (f.slowdown - 1))
             elif isinstance(f, F.NvlinkDown):
@@ -124,15 +168,19 @@ class FleetSimulator:
 
     def profile_window(self, rates: Optional[Sequence[float]] = None,
                        seed: Optional[int] = None) -> List[WorkerProfile]:
-        """One fleet of raw profiling windows.
+        """One fleet of raw profiling windows — the ACTIVE fleet.
 
-        ``rates`` (per-worker sample rates in Hz, length W) is the
-        differential-escalation knob (DESIGN.md §7): workers may be sampled
-        at different rates, and ``summarize_fleet``'s rate grouping batches
-        them without re-padding.  ``seed`` varies the per-worker noise
-        draw window to window (None keeps the config seed — byte-identical
-        to the historical single-window behavior)."""
-        return self.profile_window_slice(range(self.cfg.n_workers),
+        Until ``replace_hosts`` runs, the active fleet is workers
+        ``0..n_workers-1`` (byte-identical to the historical behavior);
+        after a re-mesh, dropped workers stop profiling and activated
+        standbys start.  ``rates`` (per-worker sample rates in Hz, length
+        ``total_workers``) is the differential-escalation knob
+        (DESIGN.md §7): workers may be sampled at different rates, and
+        ``summarize_fleet``'s rate grouping batches them without
+        re-padding.  ``seed`` varies the per-worker noise draw window to
+        window (None keeps the config seed — byte-identical to the
+        historical single-window behavior)."""
+        return self.profile_window_slice(self.active_workers,
                                          rates=rates, seed=seed)
 
     def profile_window_slice(self, workers: Sequence[int],
@@ -148,19 +196,20 @@ class FleetSimulator:
         its share of the fleet.  ``rates`` stays FULL-fleet-shaped (the
         escalation decision is global); each worker reads its own entry."""
         cfg = self.cfg
+        total = self.total_workers
         if rates is not None:
             rates = np.asarray(rates, np.float64)
-            if rates.shape != (cfg.n_workers,):
+            if rates.shape != (total,):
                 raise ValueError(
-                    f"rates must have shape ({cfg.n_workers},), "
+                    f"rates must have shape ({total},), "
                     f"got {rates.shape}")
         ring_by_rate = self._ring_by_rate(rates, seed)
         profiles = []
         for w in workers:
             w = int(w)
-            if not 0 <= w < cfg.n_workers:
+            if not 0 <= w < total:
                 raise ValueError(f"worker {w} outside fleet "
-                                 f"[0, {cfg.n_workers})")
+                                 f"[0, {total})")
             r = cfg.rate_hz if rates is None else float(rates[w])
             profiles.append(self._worker_profile(
                 w, ring_by_rate.get(r), rate_hz=r, seed=seed))
@@ -244,10 +293,15 @@ class FleetSimulator:
             if ring_traces is not None:
                 cd *= 1.0 / self._fault(F.RingSlowLink)[0].rho * 0.8
             events.append(FunctionEvent(ALLGATHER, Kind.COMM, t, t + cd, w))
-            if ring_traces is not None:
+            if ring_traces is not None and w < ring_traces.shape[0]:
                 i0, i1 = int(t * rate), min(n, int((t + cd) * rate))
                 seg = ring_traces[w][i0:i1]
                 streams["pcie_tx"][i0:i0 + len(seg)] = seg
+            elif ring_traces is not None:
+                # standby joined a ring that still has the slow bond: it
+                # bursts like any non-driving member (§3 Fig. 5b)
+                paint("pcie_tx", t, t + cd,
+                      self._fault(F.RingSlowLink)[0].rho, jitter=0.15)
             else:
                 paint("pcie_tx", t, t + cd,
                       0.85 if nv_self else (0.35 if nv_group else 0.55))

@@ -1,18 +1,24 @@
-"""Online incident pipeline (DESIGN.md §7): continuous detection,
-cross-window EMA aggregation, incident lifecycles, and differential
-escalation over the fleet-batched diagnosis path."""
+"""Online incident pipeline (DESIGN.md §7, §9): continuous detection,
+cross-window EMA aggregation, incident lifecycles with a closed
+act->verify->escalate mitigation loop, and differential escalation over
+the fleet-batched diagnosis path."""
 from repro.online.ema import EmaPatternAggregator
 from repro.online.escalation import EscalationPolicy
-from repro.online.incident import (CONFIRMED, MITIGATING, OPEN, RESOLVED,
-                                   Incident, IncidentManager)
+from repro.online.incident import (CONFIRMED, ESCALATED, MITIGATING, OPEN,
+                                   RESOLVED, STATES, VERIFYING, Incident,
+                                   IncidentManager)
+from repro.online.mitigation import (DEFAULT_CURES, AppliedMitigation,
+                                     MitigationEngine)
 from repro.online.pipeline import OnlinePipeline, WindowReport
 from repro.online.scenario import (ScenarioResult, ScenarioRunner,
                                    ScheduledFault, default_detector_cfg)
 
 __all__ = [
     "EmaPatternAggregator", "EscalationPolicy",
-    "OPEN", "CONFIRMED", "MITIGATING", "RESOLVED",
+    "OPEN", "CONFIRMED", "MITIGATING", "VERIFYING", "RESOLVED",
+    "ESCALATED", "STATES",
     "Incident", "IncidentManager",
+    "DEFAULT_CURES", "AppliedMitigation", "MitigationEngine",
     "OnlinePipeline", "WindowReport",
     "ScenarioResult", "ScenarioRunner", "ScheduledFault",
     "default_detector_cfg",

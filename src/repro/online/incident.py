@@ -1,8 +1,10 @@
-"""Incident lifecycle for the online pipeline (DESIGN.md §7).
+"""Incident lifecycle for the online pipeline (DESIGN.md §7, §9).
 
 An *incident* is one performance problem with a lifecycle:
 
-    open ──▶ confirmed ──▶ mitigating ──▶ resolved
+    open ──▶ confirmed ──▶ mitigating ──▶ verifying ──▶ resolved
+                                              │
+                                              └──▶ escalated
 
   * ``open``       — the detector fired a Trigger (anchor-level degradation)
     but localization has not yet named a culprit function;
@@ -10,12 +12,28 @@ An *incident* is one performance problem with a lifecycle:
     ``Abnormality`` matching this incident (the incident's identity is its
     abnormal *function*, which is what keeps overlapping faults distinct);
   * ``mitigating`` — the abnormality persisted into a further window and a
-    mitigation plan (``repro.core.mitigation``) is attached;
-  * ``resolved``   — the detector's recovery re-arm fired
-    (``IterationDetector.recoveries``) while the signature is clear, or the
-    signature stayed clear for ``clear_windows`` consecutive windows (the
-    fallback for overlapping incidents, where the job-level iteration time
-    only recovers when the LAST fault clears).
+    RANKED mitigation ladder (``repro.core.mitigation.plan_ladder``) is
+    attached;
+  * ``verifying``  — a ``MitigationEngine`` applied the current rung's plan
+    and the next ``verify_windows`` profiling windows must show the
+    signature clear.  A hit after ``settle_windows`` of EMA grace means the
+    plan did not work: the manager escalates to the next rung (the engine
+    applies it; the state STAYS ``verifying`` so the lifecycle only ever
+    moves forward), bounded by ``max_escalations``;
+  * ``resolved``   — the signature stayed clear for ``verify_windows``
+    consecutive windows (one window suffices when the job-level detector
+    has already recovered), or — for incidents nobody executes plans for —
+    the legacy ``clear_windows`` / detector-recovery paths;
+  * ``escalated``  — the ladder ran dry or ``max_escalations`` was spent
+    with the signature still live: terminal, a human owns it now.  An
+    escalated incident is NEVER silently resolved, and its function is
+    suppressed from opening fresh incidents until the signature has
+    actually been clear for ``clear_windows`` (so a later reappearance is
+    a genuine recurrence, not the same live fault).
+
+Recurrence linking: when a new incident confirms with the signature
+(function + worker set) of a prior terminal incident, it carries
+``recurrence_of`` = that incident's id instead of being treated as novel.
 
 One detector trigger never spawns more than one incident — reminder
 triggers (``rearm_cooldown``) and additional abnormal functions fold into
@@ -28,16 +46,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.detector import Recovery, Trigger
 from repro.core.localizer import Abnormality
-from repro.core.mitigation import MitigationPlan, plan_mitigations
+from repro.core.mitigation import MitigationPlan, plan_ladder
 from repro.core.report import Diagnosis
 
 OPEN = "open"
 CONFIRMED = "confirmed"
 MITIGATING = "mitigating"
+VERIFYING = "verifying"
 RESOLVED = "resolved"
+ESCALATED = "escalated"
 
-#: lifecycle order, for monotonicity checks in tests
-STATES = (OPEN, CONFIRMED, MITIGATING, RESOLVED)
+#: lifecycle order, for monotonicity checks in tests (resolved/escalated
+#: are alternative terminals; an incident reaches at most one of them)
+STATES = (OPEN, CONFIRMED, MITIGATING, VERIFYING, RESOLVED, ESCALATED)
+
+#: terminal states
+TERMINAL = (RESOLVED, ESCALATED)
 
 
 @dataclass
@@ -51,7 +75,19 @@ class Incident:
     workers: Tuple[int, ...] = ()       # last implicated worker set
     confirmed_at: Optional[float] = None
     resolved_at: Optional[float] = None
+    escalated_at: Optional[float] = None
+    #: ranked mitigation ladder (rung 0 first); ``rung`` is the current one
     plans: List[MitigationPlan] = field(default_factory=list)
+    rung: int = 0
+    #: (time, plan) log of every plan actually executed
+    applied: List[Tuple[float, MitigationPlan]] = field(default_factory=list)
+    #: rung switches after failed verification
+    escalations: int = 0
+    #: windows observed since the current rung was applied (None = the
+    #: current rung has not been applied yet)
+    windows_since_apply: Optional[int] = None
+    #: id of the prior terminal incident this one is a recurrence of
+    recurrence_of: Optional[int] = None
     #: consecutive windows whose localization did NOT reproduce the
     #: signature (reset on every hit)
     windows_clear: int = 0
@@ -64,7 +100,28 @@ class Incident:
 
     @property
     def active(self) -> bool:
-        return self.state != RESOLVED
+        return self.state not in TERMINAL
+
+    @property
+    def pending_plan(self) -> Optional[MitigationPlan]:
+        """The ladder rung awaiting execution by a MitigationEngine, or
+        None (nothing attached / current rung already applied and under
+        verification / ladder exhausted)."""
+        if self.state not in (MITIGATING, VERIFYING):
+            return None
+        if self.windows_since_apply is not None:
+            return None
+        if self.rung >= len(self.plans):
+            return None
+        return self.plans[self.rung]
+
+    def mark_applied(self, plan: MitigationPlan, t: float) -> None:
+        """Record that an engine executed ``plan``; verification of the
+        next windows starts now."""
+        self.applied.append((t, plan))
+        self.windows_since_apply = 0
+        if self.state == MITIGATING:
+            self._transition(VERIFYING, t)
 
 
 class IncidentManager:
@@ -72,7 +129,8 @@ class IncidentManager:
     a set of distinct incidents."""
 
     def __init__(self, fleet_size: int, clear_windows: int = 2,
-                 confirm_windows: int = 2):
+                 confirm_windows: int = 2, verify_windows: int = 2,
+                 max_escalations: int = 2, settle_windows: int = 1):
         self.fleet_size = fleet_size
         self.clear_windows = clear_windows
         #: consecutive abnormal windows a TRIGGER-LESS abnormality needs
@@ -81,8 +139,19 @@ class IncidentManager:
         #: corroborates it); without that corroboration one window could be
         #: EMA residue draining after a mitigation, not a new fault.
         self.confirm_windows = confirm_windows
+        #: clear windows an applied plan needs before its incident resolves
+        self.verify_windows = verify_windows
+        #: rung switches allowed before the incident escalates to a human
+        self.max_escalations = max_escalations
+        #: post-application grace windows where a hit is EMA residue, not
+        #: proof the plan failed
+        self.settle_windows = settle_windows
         self.incidents: List[Incident] = []
         self._candidates: Dict[str, int] = {}
+        #: functions of live ESCALATED incidents -> consecutive clear
+        #: windows since escalation; a fresh incident for the function is
+        #: suppressed until the signature has genuinely cleared once
+        self._suppressed: Dict[str, int] = {}
         self._next_id = 0
 
     # -- views -------------------------------------------------------------
@@ -142,9 +211,19 @@ class IncidentManager:
         changed: List[Incident] = []
         hit: Dict[int, bool] = {}
         seen_fns = set()
+        # verification clocks tick first: "windows since apply" counts the
+        # windows OBSERVED after the application tick
+        for inc in self.active:
+            if inc.windows_since_apply is not None:
+                inc.windows_since_apply += 1
         for d in diagnoses:
             a: Abnormality = d.abnormality
             seen_fns.add(a.function)
+            if a.function in self._suppressed:
+                # the escalated incident's fault is still live: a human
+                # owns it, no fresh incident flaps underneath them
+                self._suppressed[a.function] = 0
+                continue
             inc = self.by_function(a.function)
             if inc is None:
                 pending = self._pending()
@@ -167,6 +246,7 @@ class IncidentManager:
                 self._candidates.pop(a.function, None)
                 inc.function = a.function
                 inc.kind = a.kind
+                self._link_recurrence(inc, a)
             inc.workers = tuple(int(w) for w in a.workers)
             inc.windows_clear = 0
             hit[inc.id] = True
@@ -175,22 +255,70 @@ class IncidentManager:
                 inc._transition(CONFIRMED, t)
                 changed.append(inc)
             elif inc.state == CONFIRMED:
-                inc.plans = plan_mitigations([d], self.fleet_size)
+                inc.plans = plan_ladder(d, self.fleet_size)
                 inc._transition(MITIGATING, t)
+                changed.append(inc)
+            elif inc.state == VERIFYING \
+                    and inc.windows_since_apply is not None \
+                    and inc.windows_since_apply > self.settle_windows:
+                # the signature survived the applied plan past the EMA
+                # grace: verification failed
+                self._escalate(inc, t)
                 changed.append(inc)
         # candidate streaks break the first window their function is clean
         self._candidates = {f: c for f, c in self._candidates.items()
                             if f in seen_fns}
+        # escalated-function suppression lifts once the signature has been
+        # genuinely clear (its NEXT appearance is a recurrence)
+        for fn in list(self._suppressed):
+            if fn not in seen_fns:
+                self._suppressed[fn] += 1
+                if self._suppressed[fn] >= self.clear_windows:
+                    del self._suppressed[fn]
         need_clear = 1 if detector_healthy else self.clear_windows
         for inc in self.active:
             if hit.get(inc.id) or inc.state == OPEN:
                 continue
             inc.windows_clear += 1
-            if inc.windows_clear >= need_clear:
-                inc.resolved_at = t
-                inc._transition(RESOLVED, t)
-                changed.append(inc)
+            if inc.state == VERIFYING:
+                need = 1 if detector_healthy else self.verify_windows
+                if inc.windows_since_apply is None \
+                        or inc.windows_clear < need:
+                    continue
+            elif inc.windows_clear < need_clear:
+                continue
+            inc.resolved_at = t
+            inc._transition(RESOLVED, t)
+            changed.append(inc)
         return changed
+
+    def _escalate(self, inc: Incident, t: float) -> None:
+        """Verification of the current rung failed: move to the next rung,
+        or hand the incident to a human when the ladder/budget is spent."""
+        inc.escalations += 1
+        inc.windows_since_apply = None
+        inc.windows_clear = 0
+        if inc.rung + 1 >= len(inc.plans) \
+                or inc.escalations > self.max_escalations:
+            inc.escalated_at = t
+            inc._transition(ESCALATED, t)
+            self._suppressed[inc.function] = 0
+        else:
+            inc.rung += 1
+
+    def _link_recurrence(self, inc: Incident, a: Abnormality) -> None:
+        """Link a freshly-confirmed incident to the most recent terminal
+        incident sharing its signature (function + overlapping worker
+        set)."""
+        sig = {int(w) for w in a.workers}
+        for prior in reversed(self.incidents):
+            if prior is inc or prior.active \
+                    or prior.function != inc.function:
+                continue
+            pw = set(prior.workers)
+            if pw == sig or (pw & sig):
+                inc.recurrence_of = prior.id
+                return
 
     # -- reporting ----------------------------------------------------------
     def timeline(self) -> str:
@@ -199,7 +327,15 @@ class IncidentManager:
             head = (f"incident #{inc.id} [{inc.state}] "
                     f"{inc.function or '<unlocalized>'} "
                     f"workers={list(inc.workers)}")
+            if inc.recurrence_of is not None:
+                head += f" recurrence_of=#{inc.recurrence_of}"
+            if inc.escalations:
+                head += f" escalations={inc.escalations}"
             lines.append(head)
-            for t, st in inc.history:
-                lines.append(f"    t={t:9.2f}s  -> {st}")
+            entries = [(t, 0, f"-> {st}") for t, st in inc.history]
+            entries += [(t, 1, f"applied {p.action.value}"
+                         + (f" workers={p.workers}" if p.workers else ""))
+                        for t, p in inc.applied]
+            for t, _, msg in sorted(entries, key=lambda e: (e[0], e[1])):
+                lines.append(f"    t={t:9.2f}s  {msg}")
         return "\n".join(lines) if lines else "no incidents"

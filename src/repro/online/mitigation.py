@@ -1,0 +1,187 @@
+"""MitigationEngine: executes mitigation ladders against the running
+``FleetSimulator`` and closes the act -> verify -> escalate loop
+(DESIGN.md §9; ROADMAP "mitigation validation loop").
+
+The incident manager attaches a RANKED ladder of ``MitigationPlan``s when
+an abnormality persists (``plan_ladder``); this engine is what actually
+*acts* on the current rung:
+
+  * ``REPLACE_HOSTS``       — ``FleetSimulator.replace_hosts``: flagged
+    workers leave the mesh, standbys join (elastic re-mesh; the fleet
+    simply shrinks when the standby pool is dry).  A host-pinned fault
+    whose hosts were all dropped is cured by construction; a RANK-pinned
+    software fault follows its ranks onto the replacement hosts —
+    replacing hardware does not fix code, and verification will catch the
+    signature reappearing on the new workers;
+  * ``MIGRATE_DATALOADER`` / ``SYNCHRONIZE_GC`` / ``FLAG_CODE`` /
+    ``CHECKPOINT_NOW`` — clear every live scheduled fault that declares
+    the action curative (``ScheduledFault.cures``, defaulting to the
+    per-fault-model playbook below).  A misdiagnosed/no-op plan cures
+    nothing and leaves the fault live.
+
+Whether an action cures a fault is the SCENARIO's ground truth, not the
+diagnosis's: a schedule can declare that a GPU-looking fault is really a
+software problem (``cures=(Action.FLAG_CODE,)``), in which case replacing
+the hosts moves the fault to the standbys, verification fails, and the
+incident escalates to the next rung — the wrong-plan-first family of
+tests.  ``on_cure`` optionally replaces a cured fault with a weaker
+residual one (the partial-fix family).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import faults as F
+from repro.core.mitigation import Action, MitigationPlan
+from repro.core.simulation import FleetSimulator
+
+#: which Action actually cures each injected fault model, per the paper's
+#: §6 case studies — the scenario-level default for ``ScheduledFault.cures``
+DEFAULT_CURES: Dict[type, Tuple[Action, ...]] = {
+    F.GpuThrottle: (Action.REPLACE_HOSTS,),
+    F.NvlinkDown: (Action.REPLACE_HOSTS,),
+    F.RingSlowLink: (Action.REPLACE_HOSTS,),
+    F.SlowDataloader: (Action.MIGRATE_DATALOADER,),
+    F.CpuBoundForward: (Action.FLAG_CODE,),
+    F.AsyncGc: (Action.SYNCHRONIZE_GC,),
+}
+
+
+@dataclass
+class AppliedMitigation:
+    """One executed plan and what it did to the simulated world."""
+    incident_id: int
+    window: int
+    rung: int
+    plan: MitigationPlan
+    cured: List[str] = field(default_factory=list)      # fault class names
+    remapped: List[str] = field(default_factory=list)   # followed ranks
+    dropped: List[int] = field(default_factory=list)
+    replacements: List[int] = field(default_factory=list)
+
+    def __str__(self) -> str:
+        out = (f"incident #{self.incident_id} rung {self.rung}: "
+               f"{self.plan.action.value}")
+        if self.dropped:
+            out += f" dropped={self.dropped} standbys={self.replacements}"
+        if self.cured:
+            out += f" cured={self.cured}"
+        if self.remapped:
+            out += f" followed_ranks={self.remapped}"
+        return out
+
+
+class MitigationEngine:
+    """Applies incident ladders to a ``FleetSimulator`` + fault schedule.
+
+    Owns the schedule's LIVE view: ``faults_at(window)`` is what the
+    scenario runner injects each window — scheduled activity minus cures,
+    plus any re-pinning replace-hosts caused.
+    """
+
+    def __init__(self, sim: FleetSimulator, schedule: Sequence):
+        self.sim = sim
+        self.schedule = list(schedule)
+        #: current Fault object per schedule entry (replace_hosts re-pins
+        #: rank-pinned software faults onto their replacement workers)
+        self._live: List[F.Fault] = [sf.fault for sf in self.schedule]
+        #: window each entry was cured at (None = still live)
+        self._cured_at: List[Optional[int]] = [None] * len(self.schedule)
+        self.log: List[AppliedMitigation] = []
+
+    def cures(self, sf) -> Tuple[Action, ...]:
+        declared = getattr(sf, "cures", None)
+        if declared is not None:
+            return tuple(declared)
+        return DEFAULT_CURES.get(type(sf.fault), ())
+
+    def cured_window(self, index: int) -> Optional[int]:
+        """Window schedule entry ``index`` was cured at (None = live)."""
+        return self._cured_at[index]
+
+    def faults_at(self, window: int) -> List[F.Fault]:
+        """The schedule's live fault view for one window."""
+        out = []
+        for j, sf in enumerate(self.schedule):
+            if not sf.active(window):
+                continue
+            if self._cured_at[j] is not None:
+                residual = getattr(sf, "on_cure", None)
+                if residual is not None:
+                    out.append(residual)     # partial fix
+                continue
+            out.append(self._live[j])
+        return out
+
+    # -- plan execution ----------------------------------------------------
+    def step(self, manager, t: float, window: int
+             ) -> List[AppliedMitigation]:
+        """Execute every incident's pending ladder rung for this window
+        (called by the pipeline right after incident transitions)."""
+        applied = []
+        for inc in manager.active:
+            plan = inc.pending_plan
+            if plan is None:
+                continue
+            rec = self.apply(plan, window, incident_id=inc.id,
+                             rung=inc.rung)
+            inc.mark_applied(plan, t)
+            applied.append(rec)
+        return applied
+
+    def apply(self, plan: MitigationPlan, window: int,
+              incident_id: int = -1, rung: int = 0) -> AppliedMitigation:
+        """Execute one plan against the simulator + schedule."""
+        rec = AppliedMitigation(incident_id=incident_id, window=window,
+                                rung=rung, plan=plan)
+        mapping: Dict[int, Optional[int]] = {}
+        if plan.action is Action.REPLACE_HOSTS and plan.workers:
+            mapping = self.sim.replace_hosts(plan.workers)
+            rec.dropped = sorted(mapping)
+            rec.replacements = sorted(
+                r for r in mapping.values() if r is not None)
+        for j, sf in enumerate(self.schedule):
+            if self._cured_at[j] is not None or not sf.active(window):
+                continue
+            fault = self._live[j]
+            name = type(fault).__name__
+            cures = self.cures(sf)
+            if plan.action is Action.REPLACE_HOSTS:
+                if not mapping:
+                    continue
+                pinned = F.affected_workers(fault)
+                if pinned is None or not (pinned & set(mapping)):
+                    continue          # replacement can't touch this fault
+                if Action.REPLACE_HOSTS in cures:
+                    # host-pinned fault: replacements are healthy, the
+                    # fault shrinks off the dropped hosts (to nothing =
+                    # cured, e.g. the degraded NIC bond leaving the ring)
+                    if pinned <= set(mapping):
+                        self._cured_at[j] = window
+                        rec.cured.append(name)
+                        continue
+                    kept = F.remap_workers(fault,
+                                           {w: None for w in mapping})
+                    if kept is None:
+                        self._cured_at[j] = window
+                        rec.cured.append(name)
+                    else:
+                        self._live[j] = kept
+                else:
+                    # rank-pinned software fault: it follows its ranks
+                    # onto the replacement hosts
+                    moved = F.remap_workers(fault, mapping)
+                    if moved is None:
+                        # ranks left the fleet entirely (standby pool
+                        # dry): the signature has nowhere to manifest
+                        self._cured_at[j] = window
+                        rec.cured.append(name)
+                    elif moved is not fault:
+                        self._live[j] = moved
+                        rec.remapped.append(name)
+            elif plan.action in cures:
+                self._cured_at[j] = window
+                rec.cured.append(name)
+        self.log.append(rec)
+        return rec

@@ -15,7 +15,7 @@ components into the continuous loop the paper ran for 1.5 years.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -48,6 +48,8 @@ class WindowReport:
     present: Optional[np.ndarray] = None
     #: wire-transport counters for this window (None off the wire)
     transport: Optional[Dict[str, object]] = None
+    #: mitigation plans the engine executed this tick (DESIGN.md §9)
+    mitigations: List = field(default_factory=list)
 
     def functions(self) -> List[str]:
         return [d.abnormality.function for d in self.diagnoses]
@@ -66,7 +68,8 @@ class OnlinePipeline:
                  detector_cfg: Optional[DetectorConfig] = None,
                  summarize_backend=None, alpha: float = 0.6,
                  escalation: Optional[EscalationPolicy] = None,
-                 clear_windows: int = 2):
+                 clear_windows: int = 2, verify_windows: int = 2,
+                 max_escalations: int = 2, settle_windows: int = 1):
         self.n_workers = int(n_workers)
         self.service = PerfTrackerService(
             family=family, detector_cfg=detector_cfg,
@@ -74,10 +77,39 @@ class OnlinePipeline:
         self.detector = self.service.detector
         self.ema = EmaPatternAggregator(self.n_workers, alpha=alpha)
         self.incidents = IncidentManager(self.n_workers,
-                                         clear_windows=clear_windows)
+                                         clear_windows=clear_windows,
+                                         verify_windows=verify_windows,
+                                         max_escalations=max_escalations,
+                                         settle_windows=settle_windows)
         self.escalation = escalation
+        #: MitigationEngine executing incident ladders each tick (None =
+        #: plans are attached but never acted on, the pre-§9 behavior)
+        self.mitigator = None
+        #: mesh-membership mask (None = every row is in the mesh); see
+        #: ``set_membership``
+        self._members: Optional[np.ndarray] = None
         self.windows: List[WindowReport] = []
         self._recoveries_seen = 0
+
+    def attach_mitigator(self, engine) -> None:
+        """Install a ``repro.online.mitigation.MitigationEngine``: every
+        tick, incidents' pending ladder rungs are executed against the
+        engine's simulator and verification clocks start."""
+        self.mitigator = engine
+
+    def set_membership(self, workers: Sequence[int]) -> None:
+        """Declare the CURRENT training-mesh membership (global ids).
+
+        Distinct from per-window *presence* (§8 upload loss): rows outside
+        the mesh — cold standbys, replaced hosts — are structurally
+        excluded from localization, and plan sizing (the widespread-fault
+        fraction in ``plan_ladder``) is computed over the ACTIVE mesh, not
+        the row space.  With a mitigator attached this tracks its
+        simulator automatically; scenario runners call it per tick."""
+        mem = np.zeros(self.n_workers, bool)
+        mem[np.asarray(list(workers), np.int64)] = True
+        self._members = None if mem.all() else mem
+        self.incidents.fleet_size = int(mem.sum())
 
     # -- detection side (runs between profiling windows) -------------------
     def feed_anchors(self, events: Sequence[Tuple[str, float]]
@@ -179,11 +211,24 @@ class OnlinePipeline:
             t = float(len(self.windows))
         pats, kinds = self.ema.finalize()
         t1 = time.perf_counter()
-        abn: List[Abnormality] = self.service.localizer.localize(pats, kinds)
-        diagnoses = build_report(abn, self.n_workers)
+        # mesh membership vs transient presence: a worker whose UPLOAD was
+        # lost keeps implicating via its frozen EMA row (DESIGN.md §8), but
+        # a worker REPLACED out of the mesh (and a standby not yet in it)
+        # is structurally excluded from localization (DESIGN.md §9)
+        if self.mitigator is not None:
+            self.set_membership(self.mitigator.sim.active_workers)
+        abn: List[Abnormality] = self.service.localizer.localize(
+            pats, kinds, present=self._members)
+        # hint fractions size over the ACTIVE mesh, like plan sizing —
+        # standbys/replaced rows must not dilute them
+        diagnoses = build_report(abn, self.incidents.fleet_size)
         localize_s = time.perf_counter() - t1
         changed = self.incidents.on_window(
             t, diagnoses, detector_healthy=self.detector.healthy)
+        mitigations = []
+        if self.mitigator is not None:
+            mitigations = self.mitigator.step(self.incidents, t=t,
+                                              window=len(self.windows))
         escalated = (self.escalation.observe(abn)
                      if self.escalation else [])
         report = WindowReport(
@@ -191,7 +236,8 @@ class OnlinePipeline:
             changed=changed, escalated=escalated, rates=rates,
             raw_bytes=raw_bytes, pattern_bytes=pattern_bytes,
             summarize_s=summarize_s, localize_s=localize_s,
-            present=present, transport=transport)
+            present=present, transport=transport,
+            mitigations=mitigations)
         self.windows.append(report)
         return report
 

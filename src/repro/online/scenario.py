@@ -36,8 +36,10 @@ import numpy as np
 
 from repro.core import faults as F
 from repro.core.detector import DetectorConfig
+from repro.core.mitigation import Action
 from repro.core.simulation import FleetSimulator, SimConfig
 from repro.online.escalation import EscalationPolicy
+from repro.online.mitigation import MitigationEngine
 from repro.online.pipeline import OnlinePipeline, WindowReport
 
 #: per-window profile seed offset (must match _mp_worker_main)
@@ -49,6 +51,14 @@ class ScheduledFault:
     fault: F.Fault
     start_window: int
     end_window: int                 # exclusive
+    #: which mitigation Actions actually cure this fault — the scenario's
+    #: ground truth for the act->verify->escalate loop (DESIGN.md §9).
+    #: None = the fault model's playbook default
+    #: (``repro.online.mitigation.DEFAULT_CURES``); an empty tuple = nothing
+    #: cures it (the incident must end up ``escalated``)
+    cures: Optional[Tuple[Action, ...]] = None
+    #: partial fix: the weaker residual fault left behind after a cure
+    on_cure: Optional[F.Fault] = None
 
     def active(self, window: int) -> bool:
         return self.start_window <= window < self.end_window
@@ -116,20 +126,36 @@ class ScenarioRunner:
                  escalation: Optional[EscalationPolicy] = None,
                  detector_cfg: Optional[DetectorConfig] = None,
                  summarize_backend="numpy", alpha: float = 0.6,
-                 clear_windows: int = 2):
+                 clear_windows: int = 2, mitigation: bool = False,
+                 verify_windows: int = 2, max_escalations: int = 2,
+                 settle_windows: int = 1):
         self.sim_cfg = sim_cfg
         self.schedule = list(schedule)
         self.n_windows = n_windows
         self.iters_per_window = iters_per_window
         self.sim = FleetSimulator(sim_cfg, [])
+        # the pipeline's worker axis spans standbys too: their rows stay
+        # absent (present-masked) until a re-mesh activates them
         self.pipeline = OnlinePipeline(
-            n_workers=sim_cfg.n_workers, family=sim_cfg.family,
+            n_workers=self.sim.total_workers, family=sim_cfg.family,
             detector_cfg=(detector_cfg if detector_cfg is not None
                           else default_detector_cfg(iters_per_window)),
             summarize_backend=summarize_backend, alpha=alpha,
-            escalation=escalation, clear_windows=clear_windows)
+            escalation=escalation, clear_windows=clear_windows,
+            verify_windows=verify_windows,
+            max_escalations=max_escalations,
+            settle_windows=settle_windows)
+        #: ``mitigation=True`` closes the loop (DESIGN.md §9): incidents'
+        #: ladder rungs execute against the simulator each tick, and the
+        #: schedule's live fault view follows cures/re-meshes
+        self.engine: Optional[MitigationEngine] = None
+        if mitigation:
+            self.engine = MitigationEngine(self.sim, self.schedule)
+            self.pipeline.attach_mitigator(self.engine)
 
     def faults_at(self, window: int) -> List[F.Fault]:
+        if self.engine is not None:
+            return self.engine.faults_at(window)
         return [sf.fault for sf in self.schedule if sf.active(window)]
 
     def _window_seed(self, window: int) -> int:
@@ -145,16 +171,27 @@ class ScenarioRunner:
             self.pipeline.feed_anchors(anchors)
             self.pipeline.poll_blockage(self.sim.anchor_clock)
             rates = self.pipeline.rates()
+            # profiles come from the ACTIVE fleet only; with standbys
+            # and/or after a re-mesh the absent rows are present-masked
+            # and kept out of the mesh membership (the full-fleet path
+            # stays byte-identical to the historical behavior when every
+            # row is active)
+            active = self.sim.active_workers
+            self.pipeline.set_membership(active)
             profiles = self.sim.profile_window(
                 rates=rates, seed=self._window_seed(i))
             report = self.pipeline.window_tick(
-                profiles, t=self.sim.anchor_clock, rates=rates)
+                profiles, t=self.sim.anchor_clock, rates=rates,
+                present_workers=(None if len(active)
+                                 == self.pipeline.n_workers else active))
             spans.append((t0, self.sim.anchor_clock))
             reports.append(report)
             if verbose:
                 print(f"-- window {i} (t={report.t:.1f}s, "
                       f"faults={[type(f).__name__ for f in self.sim.faults]},"
                       f" escalated={report.escalated})")
+                for m in report.mitigations:
+                    print(f"   mitigation: {m}")
                 print(report.report(self.sim_cfg.n_workers))
         return ScenarioResult(pipeline=self.pipeline, reports=reports,
                               spans=spans)
@@ -184,6 +221,11 @@ class ScenarioRunner:
         """
         from repro.transport import DaemonServer, WindowCollector
         from repro.transport import framing
+        if self.engine is not None or self.sim_cfg.n_standby:
+            raise NotImplementedError(
+                "mitigation execution / standby re-mesh is in-process "
+                "only: the worker processes own their simulators, so "
+                "cures cannot (yet) be broadcast — run() instead")
         backend = self.pipeline.service.summarize_backend
         if backend is not None and not isinstance(backend, str):
             raise ValueError("run_multiprocess needs a picklable backend "

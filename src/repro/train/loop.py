@@ -133,5 +133,9 @@ class Trainer:
             self.mitigations.append((step, p))
             print(f"[perftracker] step {step}: {res.trigger.reason if res.trigger else '?'} -> "
                   f"{p.action.value}: {p.detail}", flush=True)
-            if p.action == Action.REPLACE_HOSTS and self.ckpt:
+            # both actions begin with an immediate checkpoint: replace
+            # re-meshes from it, checkpoint_now protects against the
+            # widespread-hardware abnormality getting worse
+            if p.action in (Action.REPLACE_HOSTS, Action.CHECKPOINT_NOW) \
+                    and self.ckpt:
                 self.ckpt.save(step, {"params": params, "opt": opt_state})

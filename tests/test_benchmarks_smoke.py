@@ -24,6 +24,9 @@ SHRINK = {
     "REPRO_BENCH_ONLINE_CASES": "C1P1_gpu_throttle",
     "REPRO_BENCH_WIRE_W": "4",
     "REPRO_BENCH_WIRE_WINDOWS": "2",
+    "REPRO_BENCH_MITIGATION_W": "8",
+    "REPRO_BENCH_MITIGATION_WINDOWS": "10",
+    "REPRO_BENCH_MITIGATION_CASES": "C2P1_slow_dataloader",
 }
 
 

@@ -1,0 +1,412 @@
+"""ISSUE 5: the closed mitigation loop (DESIGN.md §9).
+
+Three layers of coverage:
+
+  * the mitigation matrix — every fault kind maps to the expected first
+    Action (including the widespread-hardware branch that used to fall
+    through to NONE) and a ranked ladder;
+  * the act->verify->resolve loop — for all six fault models the correct
+    first plan executes against the simulator, the fault clears, and the
+    incident reaches ``resolved`` within ``verify_windows`` of the
+    application; wrong-plan-first scenarios escalate to the second rung
+    and resolve within ``verify_windows * 2``; a fault nothing cures
+    leaves the incident ``escalated`` (never silently resolved);
+  * the mechanics — elastic re-mesh keeps fleet/wire byte-parity on the
+    shrunk fleet, lifecycle states only ever move forward through STATES,
+    and recurring signatures link to their prior incident.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core.events import Kind
+from repro.core.localizer import Abnormality
+from repro.core.mitigation import (Action, format_plans, plan_ladder,
+                                   plan_mitigations)
+from repro.core.report import Diagnosis, root_cause_hint
+from repro.core.service import PerfTrackerService
+from repro.core.simulation import (ALLGATHER, DATALOADER_STACK, FORWARD_STACK,
+                                   GC_STACK, GEMM, FleetSimulator, SimConfig)
+from repro.online import (ESCALATED, RESOLVED, STATES, EscalationPolicy,
+                          ScenarioRunner, ScheduledFault)
+from tests.test_fleet import assert_identical
+
+W = 24
+N_STANDBY = 4
+INJECT = 2
+BASE_HZ, FULL_HZ = 250.0, 2000.0
+VERIFY, SETTLE = 2, 1
+
+
+def run_mitigated(schedule, n_windows=12, seed=5, n_standby=N_STANDBY,
+                  **kw):
+    esc = EscalationPolicy(n_workers=W + n_standby, base_rate_hz=BASE_HZ,
+                           full_rate_hz=FULL_HZ)
+    runner = ScenarioRunner(
+        SimConfig(n_workers=W, window_s=1.0, rate_hz=FULL_HZ, seed=seed,
+                  n_standby=n_standby),
+        schedule, n_windows=n_windows, escalation=esc, mitigation=True,
+        verify_windows=VERIFY, settle_windows=SETTLE, **kw)
+    return runner, runner.run()
+
+
+def _assert_monotone(res):
+    """Lifecycle monotonicity: state only ever moves forward in STATES."""
+    order = {s: i for i, s in enumerate(STATES)}
+    for inc in res.incidents:
+        seq = [order[s] for _, s in inc.history]
+        assert seq == sorted(seq), (inc.id, inc.history)
+        assert len(set(seq)) == len(seq), (inc.id, inc.history)
+
+
+# -- the mitigation plan matrix (unit level) ----------------------------------
+
+def _diag(kind, fn, workers, fleet=W, beta=0.5, mu=0.5, sigma=0.05):
+    idx = np.asarray(sorted(workers), np.int64)
+    pats = np.tile(np.asarray([beta, mu, sigma], np.float32),
+                   (len(idx), 1))
+    a = Abnormality(function=fn, workers=idx, kind=kind,
+                    d_expect=np.ones(len(idx)), delta=np.zeros(len(idx)),
+                    patterns=pats,
+                    typical=np.asarray([0.1, 0.5, 0.05], np.float32))
+    return Diagnosis(a, root_cause_hint(a, fleet))
+
+
+PLAN_MATRIX = [
+    pytest.param(_diag(Kind.GPU, GEMM, [3, 11], mu=0.3),
+                 Action.REPLACE_HOSTS, Action.FLAG_CODE,
+                 id="gpu_narrow"),
+    pytest.param(_diag(Kind.GPU, GEMM, range(16), mu=0.3),
+                 Action.CHECKPOINT_NOW, None,
+                 id="gpu_widespread"),
+    pytest.param(_diag(Kind.COMM, ALLGATHER, [5], mu=0.9),
+                 Action.REPLACE_HOSTS, Action.CHECKPOINT_NOW,
+                 id="comm_narrow"),
+    pytest.param(_diag(Kind.COMM, ALLGATHER, range(20), mu=0.9),
+                 Action.CHECKPOINT_NOW, None,
+                 id="comm_widespread"),
+    pytest.param(_diag(Kind.PYTHON, DATALOADER_STACK, range(22), mu=0.35),
+                 Action.MIGRATE_DATALOADER, Action.FLAG_CODE,
+                 id="python_dataloader"),
+    pytest.param(_diag(Kind.PYTHON, GC_STACK, [2, 9], mu=0.08),
+                 Action.SYNCHRONIZE_GC, Action.FLAG_CODE,
+                 id="python_gc"),
+    pytest.param(_diag(Kind.PYTHON, FORWARD_STACK, range(6), mu=0.9),
+                 Action.FLAG_CODE, Action.REPLACE_HOSTS,
+                 id="python_generic"),
+    pytest.param(_diag(Kind.MEM, "memcpy_h2d", [4], mu=0.7),
+                 Action.FLAG_CODE, None,
+                 id="mem_explicit"),
+]
+
+
+@pytest.mark.parametrize("diag,first,second", PLAN_MATRIX)
+def test_plan_ladder_matrix(diag, first, second):
+    ladder = plan_ladder(diag, W)
+    assert ladder[0].action == first
+    if second is not None:
+        assert len(ladder) >= 2 and ladder[1].action == second
+    # the flat batch view leads with the same action class
+    flat = plan_mitigations([diag], W)
+    assert flat and flat[0].action == first
+    assert all(p.action != Action.NONE for p in flat)
+
+
+def test_plan_widespread_hardware_regression():
+    """Regression: a GPU/COMM abnormality on >= 50% of the fleet used to
+    fall through to Action.NONE."""
+    d = _diag(Kind.GPU, GEMM, range(12), mu=0.3)    # exactly 50%
+    plans = plan_mitigations([d], W)
+    assert [p.action for p in plans] == [Action.CHECKPOINT_NOW]
+    assert "topology" in plans[0].detail
+
+
+def test_plan_mitigations_merges_replace_hosts():
+    a = _diag(Kind.GPU, GEMM, [3], mu=0.3)
+    b = _diag(Kind.COMM, ALLGATHER, [7], mu=0.9)
+    plans = plan_mitigations([a, b], W)
+    heads = [p for p in plans if p.action == Action.REPLACE_HOSTS]
+    assert len(heads) == 1 and heads[0].workers == [3, 7]
+    assert plans[0].action == Action.REPLACE_HOSTS
+
+
+def test_format_plans_one_line_per_plan():
+    d = _diag(Kind.GPU, GEMM, [3, 11], mu=0.3)
+    out = format_plans(plan_ladder(d, W))
+    assert out.count("mitigation:") == 2
+    assert "replace_hosts" in out
+
+
+# -- fault-model helpers ------------------------------------------------------
+
+def test_affected_workers():
+    assert F.affected_workers(F.GpuThrottle(workers=(3, 11))) == {3, 11}
+    assert F.affected_workers(F.RingSlowLink(slow_worker=9)) == {9}
+    assert F.affected_workers(F.SlowDataloader()) is None
+    assert F.affected_workers(F.CpuBoundForward()) is None
+    assert F.affected_workers(F.CpuBoundForward(workers=(1,))) == {1}
+
+
+def test_remap_workers():
+    f = F.GpuThrottle(workers=(3, 11))
+    moved = F.remap_workers(f, {3: 24, 11: 25})
+    assert set(moved.workers) == {24, 25} and moved.slowdown == f.slowdown
+    assert F.remap_workers(f, {7: 26}) is f            # untouched
+    assert F.remap_workers(f, {3: None, 11: None}) is None
+    part = F.remap_workers(f, {3: None})
+    assert set(part.workers) == {11}
+    ring = F.RingSlowLink(slow_worker=9)
+    assert F.remap_workers(ring, {9: 24}) is ring      # NIC stays put
+
+
+def test_replace_hosts_mapping_and_standby_exhaustion():
+    sim = FleetSimulator(SimConfig(n_workers=6, n_standby=1))
+    assert sim.total_workers == 7
+    mapping = sim.replace_hosts([1, 4, 4, 99])
+    assert mapping == {1: 6, 4: None}                  # pool of 1, dedup
+    assert sim.active_workers == [0, 2, 3, 5, 6]
+    # dropped workers stay out even if named again
+    assert sim.replace_hosts([1]) == {}
+
+
+def test_iteration_multiplier_ignores_dropped_fault_hosts():
+    sim = FleetSimulator(SimConfig(n_workers=8, n_standby=2),
+                         [F.GpuThrottle(workers=(3,))])
+    assert sim.iteration_multiplier() > 1.0
+    sim.replace_hosts([3])
+    assert sim.iteration_multiplier() == 1.0
+    # fleet-wide faults keep gating regardless of membership
+    sim.faults = [F.SlowDataloader()]
+    assert sim.iteration_multiplier() > 1.0
+
+
+# -- the act -> verify -> resolve matrix --------------------------------------
+
+#: (fault, expected incident function, expected first action)
+SCENARIOS = [
+    pytest.param(F.GpuThrottle(workers=(3, 11)), GEMM,
+                 Action.REPLACE_HOSTS, id="C1P1_gpu_throttle"),
+    pytest.param(F.NvlinkDown(workers=[5], group_size=8), ALLGATHER,
+                 Action.REPLACE_HOSTS, id="C1P2_nvlink_down"),
+    pytest.param(F.RingSlowLink(slow_worker=9, rho=0.4), ALLGATHER,
+                 Action.REPLACE_HOSTS, id="S3_ring_slow_link"),
+    pytest.param(F.SlowDataloader(), DATALOADER_STACK,
+                 Action.MIGRATE_DATALOADER, id="C2P1_slow_dataloader"),
+    pytest.param(F.CpuBoundForward(workers=range(6)), FORWARD_STACK,
+                 Action.FLAG_CODE, id="C2P2_cpu_forward"),
+    pytest.param(F.AsyncGc(probability=0.5, pause_s=0.25), GC_STACK,
+                 Action.SYNCHRONIZE_GC, id="C2P3_async_gc"),
+]
+
+
+@pytest.mark.parametrize("fault,expect,action", SCENARIOS)
+def test_mitigation_matrix_act_verify_resolve(fault, expect, action):
+    """Correct first plan applied -> fault cleared in the simulator ->
+    incident resolved within verify_windows of the application."""
+    runner, res = run_mitigated(
+        [ScheduledFault(fault, INJECT, 12)])       # schedule never removes
+    inc = next(i for i in res.incidents if i.function == expect)
+    # the expected first plan was executed, exactly once for this incident
+    mine = [m for m in runner.engine.log if m.incident_id == inc.id]
+    assert mine and mine[0].plan.action == action
+    assert inc.escalations == 0
+    # the plan actually cleared the injected fault in the simulator
+    cure_w = runner.engine.cured_window(0)
+    assert cure_w == mine[0].window
+    assert runner.engine.faults_at(cure_w + 1) == []
+    # ... and the incident verified and resolved within verify_windows
+    assert inc.state == RESOLVED
+    resolved_w = res.window_of(inc.resolved_at)
+    assert resolved_w - mine[0].window <= VERIFY
+    # the full forward-only lifecycle was walked
+    states = [s for _, s in inc.history]
+    assert states == ["open", "confirmed", "mitigating", "verifying",
+                      "resolved"]
+    _assert_monotone(res)
+
+
+def test_membership_tracks_active_mesh_not_row_space():
+    """Plan sizing (the widespread-fault fraction) and localization run
+    over the ACTIVE mesh, not the pipeline's row space: cold standbys
+    must not dilute ``fleet_size`` (with or without an engine)."""
+    runner, _ = run_mitigated(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 12)])
+    assert runner.pipeline.n_workers == W + N_STANDBY
+    assert runner.pipeline.incidents.fleet_size == W     # 24, not 28
+    # no engine: standbys still stay out of the mesh statistics
+    esc = EscalationPolicy(n_workers=W + 2, base_rate_hz=BASE_HZ,
+                           full_rate_hz=FULL_HZ)
+    r2 = ScenarioRunner(
+        SimConfig(n_workers=W, window_s=1.0, rate_hz=FULL_HZ, seed=5,
+                  n_standby=2),
+        [], n_windows=2, escalation=esc)
+    res2 = r2.run()
+    assert r2.pipeline.incidents.fleet_size == W
+    assert res2.incidents == []
+    assert all(r.functions() == [] for r in res2.reports)
+
+
+def test_replace_hosts_remeshes_onto_standbys():
+    runner, res = run_mitigated(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 12)])
+    active = runner.sim.active_workers
+    assert 3 not in active and 11 not in active
+    assert {24, 25} <= set(active)                  # standbys joined
+    assert len(active) == W                          # fleet size held
+    # post-re-mesh windows carry a present mask excluding the dropped rows
+    last = res.reports[-1]
+    assert last.present is not None
+    assert not last.present[3] and not last.present[11]
+    assert last.present[24] and last.present[25]
+
+
+WRONG_PLAN = [
+    # "GPU" signature that is really software: replacing hosts moves the
+    # fault onto the standbys, rung 2 (flag-code) cures it
+    pytest.param(F.GpuThrottle(workers=(3, 11)), GEMM,
+                 (Action.FLAG_CODE,),
+                 [Action.REPLACE_HOSTS, Action.FLAG_CODE],
+                 id="gpu_actually_software"),
+    # "slow Python forward" that is really bad hosts: flagging code does
+    # nothing, rung 2 (replace) drops the hosts
+    pytest.param(F.CpuBoundForward(workers=(4, 9)), FORWARD_STACK,
+                 (Action.REPLACE_HOSTS,),
+                 [Action.FLAG_CODE, Action.REPLACE_HOSTS],
+                 id="python_actually_hardware"),
+]
+
+
+@pytest.mark.parametrize("fault,expect,cures,actions", WRONG_PLAN)
+def test_wrong_plan_first_escalates_then_resolves(fault, expect, cures,
+                                                  actions):
+    runner, res = run_mitigated(
+        [ScheduledFault(fault, INJECT, 14, cures=cures)], n_windows=14)
+    inc = next(i for i in res.incidents if i.function == expect)
+    assert inc.state == RESOLVED
+    assert inc.escalations == 1
+    assert [p.action for _, p in inc.applied] == actions
+    # the second rung is what cured it
+    mine = [m for m in runner.engine.log if m.incident_id == inc.id]
+    assert mine[-1].cured == [type(fault).__name__]
+    # resolved within verify_windows * 2 of the FIRST application
+    resolved_w = res.window_of(inc.resolved_at)
+    assert resolved_w - mine[0].window <= VERIFY * 2
+    _assert_monotone(res)
+
+
+def test_wrong_replace_moves_software_fault_to_standbys():
+    """The remap story in detail: the signature reappears on the
+    replacement workers, which is exactly what fails verification."""
+    runner, res = run_mitigated(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 14,
+                        cures=(Action.FLAG_CODE,))], n_windows=14)
+    replace = runner.engine.log[0]
+    assert replace.plan.action == Action.REPLACE_HOSTS
+    assert replace.remapped == ["GpuThrottle"]
+    inc = next(i for i in res.incidents if i.function == GEMM)
+    # the last implication before the cure named the standbys
+    assert {24, 25} <= set(inc.workers)
+
+
+def test_max_escalations_exhaustion_leaves_escalated():
+    """A fault nothing cures: the ladder runs dry and the incident ends
+    ``escalated`` — never silently resolved, even after the schedule
+    removes the fault — and no duplicate incident flaps underneath."""
+    runner, res = run_mitigated(
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 9,
+                        cures=())], n_windows=13)
+    incs = [i for i in res.incidents if i.function == GEMM]
+    assert len(incs) == 1                       # suppression: no flapping
+    inc = incs[0]
+    assert inc.state == ESCALATED
+    assert inc.resolved_at is None
+    assert inc.escalations >= 1
+    assert len(inc.applied) == len(inc.plans)   # every rung was tried
+    assert [s for _, s in inc.history][-1] == "escalated"
+    _assert_monotone(res)
+
+
+def test_partial_fix_residual_fault_stays_live():
+    """``on_cure`` leaves a weaker residual: the cure downgrades the fault
+    instead of clearing it."""
+    runner, _ = run_mitigated(
+        [ScheduledFault(F.SlowDataloader(slowdown=20.0), INJECT, 12,
+                        on_cure=F.SlowDataloader(slowdown=5.0))])
+    cure_w = runner.engine.cured_window(0)
+    assert cure_w is not None
+    residual = runner.engine.faults_at(cure_w + 1)
+    assert len(residual) == 1 and residual[0].slowdown == 5.0
+
+
+# -- recurrence linking -------------------------------------------------------
+
+def test_recurrence_links_to_prior_incident_with_engine():
+    runner, res = run_mitigated(
+        [ScheduledFault(F.SlowDataloader(), 2, 14),
+         ScheduledFault(F.SlowDataloader(), 8, 14)], n_windows=14)
+    incs = [i for i in res.incidents if i.function == DATALOADER_STACK]
+    assert len(incs) == 2
+    first, second = incs
+    assert first.state == RESOLVED and second.state == RESOLVED
+    assert second.recurrence_of == first.id
+    assert f"recurrence_of=#{first.id}" in res.timeline()
+    _assert_monotone(res)
+
+
+def test_recurrence_links_without_engine():
+    """ROADMAP item 4 (small version): schedule-driven recurrence on the
+    plain runner links too."""
+    esc = EscalationPolicy(n_workers=W, base_rate_hz=BASE_HZ,
+                           full_rate_hz=FULL_HZ)
+    res = ScenarioRunner(
+        SimConfig(n_workers=W, window_s=1.0, rate_hz=FULL_HZ, seed=5),
+        [ScheduledFault(F.GpuThrottle(workers=(3, 11)), 2, 5),
+         ScheduledFault(F.GpuThrottle(workers=(3, 11)), 9, 12)],
+        n_windows=15, escalation=esc).run()
+    incs = [i for i in res.incidents if i.function == GEMM]
+    assert len(incs) == 2
+    assert incs[1].recurrence_of == incs[0].id
+    _assert_monotone(res)
+
+
+# -- re-mesh byte parity (fleet vs wire on the shrunk fleet) ------------------
+
+def test_remesh_fleet_wire_byte_parity():
+    """After REPLACE_HOSTS shrinks the fleet onto standbys, the in-process
+    fleet-batched path and the real-socket wire path still produce
+    byte-identical diagnoses on the shrunk fleet."""
+    cfg = SimConfig(n_workers=12, window_s=1.0, rate_hz=1000.0, seed=3,
+                    n_standby=2)
+    sim = FleetSimulator(cfg, [F.GpuThrottle(workers=(2, 5))])
+    mapping = sim.replace_hosts([2, 5])
+    assert mapping == {2: 12, 5: 13}
+    # the replacement cured the original fault; a residual fault on a
+    # surviving worker keeps the diagnosis non-trivial
+    sim.faults = [F.GpuThrottle(workers=(7,))]
+    profiles = sim.profile_window()
+    assert len(profiles) == 12
+    assert {p.worker for p in profiles} == set(sim.active_workers)
+    svc = PerfTrackerService()
+    fleet = svc.diagnose_profiles(profiles, mode="fleet")
+    wire = PerfTrackerService().diagnose_profiles(profiles, mode="wire")
+    assert fleet.diagnoses, "shrunk fleet lost the diagnosis"
+    assert_identical(fleet, wire)
+
+
+def test_diagnosis_report_mitigation_section():
+    cfg = SimConfig(n_workers=8, window_s=1.0, rate_hz=1000.0, seed=3)
+    sim = FleetSimulator(cfg, [F.GpuThrottle(workers=(2,))])
+    res = PerfTrackerService().diagnose_profiles(sim.profile_window())
+    assert "mitigation:" not in res.report()
+    out = res.report(mitigation=True)
+    assert "mitigation: replace_hosts" in out
+    assert any(p.action == Action.REPLACE_HOSTS
+               for p in res.suggested_plans())
+
+
+def test_run_multiprocess_rejects_mitigation():
+    runner = ScenarioRunner(
+        SimConfig(n_workers=4, window_s=0.5, rate_hz=250.0, seed=1),
+        [], n_windows=1, mitigation=True)
+    with pytest.raises(NotImplementedError):
+        runner.run_multiprocess(n_procs=2)
