@@ -1,7 +1,8 @@
 PY ?= python
 
 .PHONY: test test-wire test-cov deps lint bench bench-summarize bench-fleet \
-        bench-online bench-wire bench-mitigation bench-gate bench-gate-update
+        bench-online bench-wire bench-mitigation bench-tree bench-gate \
+        bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -48,10 +49,15 @@ bench-wire:
 bench-mitigation:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only mitigation_loop
 
-# the CI benchmark-regression gate: run the five gated benchmarks with the
+# sharded collector tree vs flat at W=1024 (ISSUE 6); needs a few minutes
+# and ~3k file descriptors (the bench raises its own RLIMIT_NOFILE)
+bench-tree:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only collector_tree
+
+# the CI benchmark-regression gate: run the six gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,collector_tree
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

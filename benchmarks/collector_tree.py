@@ -1,0 +1,249 @@
+"""ISSUE 6: sharded collector tree vs flat single collector (DESIGN.md §10).
+
+Measures the W=1024 upload path end-to-end to DIAGNOSIS-READY patterns —
+window assembly plus aggregation into the full-width ``(W, F, 3)`` buffer
+— under both topologies:
+
+  * ``flat``: W ``WireClient``s -> one ``DaemonServer``/``WindowCollector``;
+    the collector process ingests 2xW frames per window and unpacks W
+    msgpack payloads serially after assembly;
+  * ``tree``: W clients -> ``N_SHARDS`` leaf collectors, each a REAL
+    spawned process (``leaf_process_main`` — the deployed shape: one
+    rack-local collector per host) -> root ``ShardCollector``; racks
+    decode + compact in parallel across the leaf processes and the root
+    ingests N_SHARDS compacted frames per window and block-scatters them.
+
+Rows::
+
+    tree/collect_W<W>_S<S>,  us per diagnosis-ready window (tree),
+        throughput_wps=<tree windows/s>;flat_wps=<flat windows/s>;
+        ratio_vs_flat=<tree/flat>;root_frames_per_window=<frames>;
+        root_ingress_kb=<compacted KB/window>;flat_ingress_kb=<KB/window>;
+        ingress_ratio=<flat_kb/root_kb>;parity=Y|N;delivered=Y|N
+
+Gated metrics: ``ingress_ratio`` and ``root_frames_per_window`` pin the
+deterministic, load-independent scaling win — the root ingests O(shards)
+compacted frames (~6x fewer bytes) instead of 2xW raw frames per window;
+``parity`` pins tree-mode aggregation byte-identical to the flat
+scatter; ``delivered`` pins losslessness (every worker, every window, no
+dups, no timeouts).  ``ratio_vs_flat`` is gated only with a wide floor:
+end-to-end windows/s is dominated by the single parent fanning 2xW
+frames out through W clients, and on a 1-core runner the leaf processes
+cannot run in parallel, so the extra rack hop costs latency that
+multi-core hosts win back via parallel shard decode.
+
+Env knobs (CI smoke): ``REPRO_BENCH_TREE_W`` (default 1024),
+``REPRO_BENCH_TREE_SHARDS`` (default 8), ``REPRO_BENCH_TREE_WINDOWS``
+(default 4).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+W = int(os.environ.get("REPRO_BENCH_TREE_W", "1024"))
+N_SHARDS = int(os.environ.get("REPRO_BENCH_TREE_SHARDS", "8"))
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_TREE_WINDOWS", "4"))
+N_FUNCTIONS = 40          # ~KB payload per upload, like the paper's Fig. 11
+
+
+def _raise_nofile() -> None:
+    """W=1024 needs ~3 fds per client plus the server side; lift the soft
+    RLIMIT_NOFILE to the hard cap so CI runners with a 1024 default don't
+    die in accept()."""
+    try:
+        import resource
+        soft, hard = resource.getrlimit(resource.RLIMIT_NOFILE)
+        if soft < hard:
+            resource.setrlimit(resource.RLIMIT_NOFILE, (hard, hard))
+    except (ImportError, ValueError, OSError):
+        pass
+
+
+def _uploads():
+    import msgpack
+    from repro.core.daemon import PatternUpload
+    rng = np.random.default_rng(0)
+    out = []
+    for w in range(W):
+        payload = msgpack.packb({
+            f"train.py:train_loop/module_{i}.py:forward_{i}": (
+                float(rng.uniform(0, 0.5)), float(rng.uniform(0, 1)),
+                float(rng.uniform(0, 0.2)), int(i % 4))
+            for i in range(N_FUNCTIONS)})
+        out.append(PatternUpload(worker=w, payload=payload,
+                                 summarize_s=0.0, raw_bytes=1 << 20))
+    return out
+
+
+def _dial(address, worker, max_frame, timeout=30.0):
+    """Connect to a leaf socket, retrying while its process finishes
+    binding (the root handshake normally guarantees it already has)."""
+    from repro.transport import WireClient
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            return WireClient(address, worker, max_frame=max_frame)
+        except OSError:
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.05)
+
+
+def _send_window(clients, uploads, window):
+    for c, u in zip(clients, uploads):
+        c.send_upload(window, u)
+        c.end_window(window)
+
+
+def _flat_phase(uploads, max_frame):
+    """Flat topology: windows/s to diagnosis-ready patterns, plus the
+    reference finalize() output for the parity check."""
+    from repro.core.service import PerfTrackerService
+    from repro.transport import DaemonServer, WindowCollector, WireClient
+    svc = PerfTrackerService()
+    collector = WindowCollector(range(W))
+    delivered = True
+    times = []
+    reference = None
+    with DaemonServer(collector, max_frame=max_frame) as server:
+        clients = [WireClient(server.address, u.worker,
+                              max_frame=max_frame) for u in uploads]
+        try:
+            _send_window(clients, uploads, -1)            # warmup
+            collector.wait_window(-1, timeout=60.0)
+            for i in range(N_WINDOWS):
+                t0 = time.perf_counter()
+                _send_window(clients, uploads, i)
+                batch = collector.wait_window(i, timeout=60.0)
+                agg, present = svc.aggregate_batch(batch.sorted_uploads(),
+                                                   W)
+                pats, kinds = agg.finalize()
+                times.append(time.perf_counter() - t0)
+                delivered &= (len(batch.uploads) == W
+                              and batch.duplicates == 0
+                              and not batch.timed_out)
+                if reference is None:
+                    reference = (pats, kinds, present)
+        finally:
+            for c in clients:
+                c.close()
+    return times, delivered, reference
+
+
+def _tree_phase(uploads, max_frame):
+    """Sharded topology: the same measurement with every rack collector in
+    its own spawned process feeding the in-process root."""
+    import multiprocessing as mp
+    import shutil
+    import tempfile
+
+    from repro.transport import DaemonServer, ShardCollector, framing
+    from repro.transport.tree import leaf_process_main
+
+    slices = np.array_split(np.arange(W), N_SHARDS)
+    shard_workers = {s: tuple(map(int, sl)) for s, sl in enumerate(slices)}
+    collector = ShardCollector(shard_workers)
+    root = DaemonServer(collector, max_frame=max_frame).start()
+    ctx = mp.get_context("spawn")
+    sock_dir = tempfile.mkdtemp(prefix="repro-tree-bench-")
+    addr_of = {}
+    procs = []
+    for s, ws in shard_workers.items():
+        leaf_addr = f"{sock_dir}/leaf{s}.sock"
+        p = ctx.Process(target=leaf_process_main,
+                        args=(s, ws, root.address, leaf_addr),
+                        kwargs={"max_frame": max_frame,
+                                "window_timeout": 60.0},
+                        daemon=True)
+        p.start()
+        procs.append(p)
+        for w in ws:
+            addr_of[w] = leaf_addr
+    delivered = True
+    times = []
+    first = None
+    ingress_bytes = []
+    try:
+        # every leaf uplink must be live before the first broadcast
+        if not root.wait_connections(N_SHARDS, timeout=60.0):
+            raise RuntimeError("leaf processes never dialed the root")
+        clients = [_dial(addr_of[u.worker], u.worker, max_frame)
+                   for u in uploads]
+        try:
+            root.broadcast(framing.window_start_msg(-1, None))  # warmup
+            _send_window(clients, uploads, -1)
+            collector.wait_window(-1, timeout=60.0)
+            for i in range(N_WINDOWS):
+                t0 = time.perf_counter()
+                root.broadcast(framing.window_start_msg(i, None))
+                _send_window(clients, uploads, i)
+                batch = collector.wait_window(i, timeout=60.0)
+                agg, present = batch.aggregate(W)
+                pats, kinds = agg.finalize()
+                times.append(time.perf_counter() - t0)
+                delivered &= (len(batch.present) == W
+                              and batch.duplicates == 0
+                              and batch.duplicate_shards == 0
+                              and not batch.timed_out
+                              and len(batch.shards) == N_SHARDS)
+                ingress_bytes.append(
+                    sum(len(m["rows"]) + sum(len(n) for n in m["names"])
+                        for m in batch.shards.values()))
+                if first is None:
+                    first = (pats, kinds, present)
+        finally:
+            for c in clients:
+                c.close()
+        frames_per_window = (collector.total_shards - N_SHARDS) \
+            / max(1, N_WINDOWS)
+    finally:
+        root.broadcast(framing.stop_msg())
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():
+                p.terminate()
+        root.stop()
+        shutil.rmtree(sock_dir, ignore_errors=True)
+    return times, delivered, first, frames_per_window, ingress_bytes
+
+
+def _parity(a, b) -> bool:
+    """Byte-identical finalize() outputs (names, kinds, values, mask)."""
+    (pa, ka, ma), (pb, kb, mb) = a, b
+    if list(pa) != list(pb) or ka != kb or not np.array_equal(ma, mb):
+        return False
+    return all(np.array_equal(pa[n], pb[n]) for n in pa)
+
+
+def run():
+    from repro.transport import framing
+    _raise_nofile()
+    uploads = _uploads()
+    max_frame = framing.max_frame_bytes(W)
+    flat_times, flat_ok, reference = _flat_phase(uploads, max_frame)
+    (tree_times, tree_ok, first,
+     frames_per_window, ingress_bytes) = _tree_phase(uploads, max_frame)
+    parity = reference is not None and first is not None \
+        and _parity(first, reference)
+    flat_wps = N_WINDOWS / sum(flat_times)
+    tree_wps = N_WINDOWS / sum(tree_times)
+    flat_kb = sum(len(u.payload) for u in uploads) / 1024.0
+    root_kb = float(np.mean(ingress_bytes)) / 1024.0 if ingress_bytes \
+        else float("nan")
+    return [(f"tree/collect_W{W}_S{N_SHARDS}",
+             float(np.median(tree_times)) * 1e6,
+             f"throughput_wps={tree_wps:.2f};flat_wps={flat_wps:.2f};"
+             f"ratio_vs_flat={tree_wps / flat_wps:.2f};"
+             f"root_frames_per_window={frames_per_window:.1f};"
+             f"root_ingress_kb={root_kb:.1f};flat_ingress_kb={flat_kb:.1f};"
+             f"ingress_ratio={flat_kb / root_kb:.2f};"
+             f"parity={'Y' if parity else 'N'};"
+             f"delivered={'Y' if (flat_ok and tree_ok) else 'N'}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

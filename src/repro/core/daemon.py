@@ -65,14 +65,16 @@ class PerfTrackerDaemon:
     """
 
     def __init__(self, worker: int, address, backend=None,
-                 max_queue: int = 64, frame_filter=None):
+                 max_queue: int = 64, frame_filter=None,
+                 auth_token=None, max_frame=None):
         # late import: repro.transport pulls framing/msgpack only when a
         # daemon actually goes on the wire
         from repro.transport.client import WireClient
         self.worker = int(worker)
         self.backend = backend
         self.client = WireClient(address, worker, max_queue=max_queue,
-                                 frame_filter=frame_filter)
+                                 frame_filter=frame_filter,
+                                 auth_token=auth_token, max_frame=max_frame)
 
     def process_window(self, window: int, profile: WorkerProfile,
                        kind_of: Optional[Dict[str, Kind]] = None

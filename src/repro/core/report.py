@@ -105,6 +105,15 @@ def format_transport(tr) -> str:
     out = (f"transport: {tr['present']}/{tr['expected']} workers "
            f"reported; dropped={tr['client_dropped']} "
            f"duplicates={tr['duplicates']}")
+    if tr.get("reconnects"):
+        out += f" reconnects={tr['reconnects']}"
     if tr["missing"]:
         out += f" missing={list(tr['missing'])}"
+    if "shards" in tr:
+        out += (f"\ntransport: collector tree "
+                f"{tr['shards']}/{tr['expected_shards']} shards reported")
+        if tr.get("missing_shards"):
+            out += f" missing_shards={list(tr['missing_shards'])}"
+        if tr.get("duplicate_shards"):
+            out += f" duplicate_shards={tr['duplicate_shards']}"
     return out

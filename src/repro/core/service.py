@@ -146,21 +146,33 @@ class PerfTrackerService:
         instead of crashing or polluting the fleet median."""
         if fleet_size is None:
             fleet_size = len(batch.expected)
-        uploads = batch.sorted_uploads()
         t1 = time.perf_counter()
-        agg, present = self.aggregate_batch(uploads, fleet_size, row_of)
+        if hasattr(batch, "aggregate"):
+            # collector-tree window (transport.TreeWindowBatch): shard
+            # blocks scatter straight into the aggregator — the per-worker
+            # msgpack was already unpacked at the leaves (DESIGN.md §10)
+            agg, present = batch.aggregate(fleet_size)
+            summarize_s = batch.summarize_s
+            pattern_bytes = batch.pattern_bytes
+            raw_bytes = batch.raw_bytes
+        else:
+            uploads = batch.sorted_uploads()
+            agg, present = self.aggregate_batch(uploads, fleet_size, row_of)
+            summarize_s = sum(u.summarize_s for u in uploads)
+            pattern_bytes = sum(len(u.payload) for u in uploads)
+            raw_bytes = sum(u.raw_bytes for u in uploads)
         pats, kinds = agg.finalize()
         abn = self.localizer.localize(pats, kinds, present=present)
         timing = dict(timing or {})
         timing["localize_s"] = time.perf_counter() - t1
-        timing["upload_summarize_s"] = sum(u.summarize_s for u in uploads)
+        timing["upload_summarize_s"] = summarize_s
         return DiagnosisResult(
             trigger=trigger,
             diagnoses=build_report(abn, fleet_size),
             fleet_size=fleet_size,
             timing=timing,
-            pattern_bytes=sum(len(u.payload) for u in uploads),
-            raw_bytes=sum(u.raw_bytes for u in uploads),
+            pattern_bytes=pattern_bytes,
+            raw_bytes=raw_bytes,
             transport=batch.stats())
 
     def diagnose_profiles(self, profiles: Sequence[WorkerProfile],

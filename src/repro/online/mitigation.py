@@ -72,6 +72,23 @@ class AppliedMitigation:
         return out
 
 
+def plan_to_wire(m: AppliedMitigation) -> Dict:
+    """Serialize one executed plan for the wire control plane (DESIGN.md
+    §10): the (action, workers, window) triple is everything a worker
+    process needs to replay the plan deterministically on its OWN engine
+    — ``FleetSimulator.replace_hosts`` and every cure decision are pure
+    functions of that triple plus shared scenario state."""
+    return {"window": int(m.window), "action": m.plan.action.value,
+            "workers": [int(w) for w in m.plan.workers]}
+
+
+def plan_from_wire(d: Dict) -> Tuple[MitigationPlan, int]:
+    """Inverse of ``plan_to_wire``: (plan, window it was applied at)."""
+    return (MitigationPlan(action=Action(d["action"]),
+                           workers=[int(w) for w in d["workers"]]),
+            int(d["window"]))
+
+
 class MitigationEngine:
     """Applies incident ladders to a ``FleetSimulator`` + fault schedule.
 

@@ -191,14 +191,24 @@ class OnlinePipeline:
         dropped (backpressure, loss) keep their previous smoothed pattern,
         and the batch's transport counters surface in the report."""
         t0 = time.perf_counter()
-        uploads = batch.sorted_uploads()
-        agg, present = self.service.aggregate_batch(uploads, self.n_workers)
+        if hasattr(batch, "aggregate"):
+            # collector-tree window (transport.TreeWindowBatch): shard
+            # blocks were compacted at the leaves; scatter them straight
+            # into the fleet aggregator (DESIGN.md §10)
+            agg, present = batch.aggregate(self.n_workers)
+            raw_bytes = batch.raw_bytes
+            pattern_bytes = batch.pattern_bytes
+        else:
+            uploads = batch.sorted_uploads()
+            agg, present = self.service.aggregate_batch(uploads,
+                                                        self.n_workers)
+            raw_bytes = sum(u.raw_bytes for u in uploads)
+            pattern_bytes = sum(len(u.payload) for u in uploads)
         self.ema.fold(agg, present=present)
         summarize_s = time.perf_counter() - t0
         return self._finish_tick(
             t=t, rates=rates, present=present,
-            raw_bytes=sum(u.raw_bytes for u in uploads),
-            pattern_bytes=sum(len(u.payload) for u in uploads),
+            raw_bytes=raw_bytes, pattern_bytes=pattern_bytes,
             summarize_s=summarize_s, transport=batch.stats())
 
     def _finish_tick(self, t: Optional[float], rates, present,

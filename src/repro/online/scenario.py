@@ -39,7 +39,7 @@ from repro.core.detector import DetectorConfig
 from repro.core.mitigation import Action
 from repro.core.simulation import FleetSimulator, SimConfig
 from repro.online.escalation import EscalationPolicy
-from repro.online.mitigation import MitigationEngine
+from repro.online.mitigation import MitigationEngine, plan_to_wire
 from repro.online.pipeline import OnlinePipeline, WindowReport
 
 #: per-window profile seed offset (must match _mp_worker_main)
@@ -201,8 +201,11 @@ class ScenarioRunner:
                          window_timeout: float = 60.0,
                          log_path: Optional[str] = None,
                          max_queue: int = 64,
+                         n_shards: Optional[int] = None,
+                         auth_token: Optional[str] = None,
                          verbose: bool = False) -> ScenarioResult:
-        """The same scenario across REAL process boundaries (DESIGN.md §8).
+        """The same scenario across REAL process boundaries (DESIGN.md §8,
+        §10).
 
         Spawns ``n_procs`` worker processes (``multiprocessing`` spawn
         context — a cold interpreter each, like a real per-host daemon).
@@ -210,51 +213,91 @@ class ScenarioRunner:
         per-window it materializes its workers' raw profiles, summarizes
         locally, and uploads ~KB patterns over its own socket.  The parent
         runs the anchor stream/detector, broadcasts ``window_start``
-        control frames (carrying the escalation rates), assembles each
-        window loss-tolerantly, and ticks the online pipeline on the
-        batches.
+        control frames (carrying the escalation rates — and, with
+        mitigation or standbys, the mesh membership plus the mitigation
+        plans applied since the previous window), assembles each window
+        loss-tolerantly, and ticks the online pipeline on the batches.
+
+        ``mitigation=True`` works across the wire: the parent's engine
+        executes incident ladders as usual, and each executed plan is
+        serialized (``plan_to_wire``) into the next ``window_start``;
+        every child replays it on its OWN ``MitigationEngine`` +
+        ``FleetSimulator`` — both deterministic — so cures, residual
+        faults, and ``replace_hosts`` re-meshes stay bit-identical across
+        process boundaries, and collectors' expected sets follow the mesh.
+
+        ``n_shards >= 1`` routes uploads through a two-tier collector
+        tree (``transport.CollectorTree``): each worker daemon dials its
+        rack's LEAF, leaves assemble + compact their slices, and the root
+        ingests O(n_shards) frames per window instead of O(W).
 
         ``loss`` injects that fraction of upload-frame drops at the
         framing layer in every child (deterministic per (worker, window)
         via ``loss_seed``) — the collector's partial-window semantics and
         the EMA's frozen-row policy carry diagnosis through the holes.
         """
-        from repro.transport import DaemonServer, WindowCollector
-        from repro.transport import framing
-        if self.engine is not None or self.sim_cfg.n_standby:
-            raise NotImplementedError(
-                "mitigation execution / standby re-mesh is in-process "
-                "only: the worker processes own their simulators, so "
-                "cures cannot (yet) be broadcast — run() instead")
+        from repro.transport import (CollectorTree, DaemonServer,
+                                     WindowCollector, framing,
+                                     max_frame_bytes)
         backend = self.pipeline.service.summarize_backend
         if backend is not None and not isinstance(backend, str):
             raise ValueError("run_multiprocess needs a picklable backend "
                              "name (str or None), got an instance")
-        W = self.sim_cfg.n_workers
-        n_procs = max(1, min(int(n_procs), W))
-        slices = np.array_split(np.arange(W), n_procs)
-        collector = WindowCollector(range(W))
-        server = DaemonServer(collector, log_path=log_path).start()
+        # the wire spans the TOTAL worker axis: standby daemons connect
+        # and idle outside the mesh until a re-mesh activates them
+        W_total = self.sim.total_workers
+        active = [int(w) for w in self.sim.active_workers]
+        #: the control plane carries membership/plan deltas only when the
+        #: mesh can actually change mid-run — the static-mesh wire format
+        #: (and its byte-for-byte behavior) is untouched otherwise
+        need_membership = self.engine is not None \
+            or bool(self.sim_cfg.n_standby)
+        max_frame = max_frame_bytes(W_total)
+        n_procs = max(1, min(int(n_procs), W_total))
+        slices = np.array_split(np.arange(W_total), n_procs)
+        tree: Optional[CollectorTree] = None
+        if n_shards is not None:
+            tree = CollectorTree(range(W_total), n_shards,
+                                 auth_token=auth_token, max_frame=max_frame,
+                                 window_timeout=window_timeout,
+                                 log_path=log_path).start()
+            hub, server = tree, tree.root
+            addr_of = {w: tree.address_of(w) for w in range(W_total)}
+        else:
+            collector = WindowCollector(active)
+            server = DaemonServer(collector, log_path=log_path,
+                                  auth_token=auth_token,
+                                  max_frame=max_frame).start()
+            hub = collector
+            addr_of = {w: server.address for w in range(W_total)}
         ctx = mp.get_context("spawn")
         procs = [
             ctx.Process(
                 target=_mp_worker_main,
-                args=(server.address, [int(w) for w in sl], self.sim_cfg,
+                args=([addr_of[int(w)] for w in sl],
+                      [int(w) for w in sl], self.sim_cfg,
                       self.schedule, _WINDOW_SEED_STRIDE, float(loss),
                       (self.sim_cfg.seed if loss_seed is None
                        else int(loss_seed)),
-                      backend, int(max_queue)),
+                      backend, int(max_queue),
+                      self.engine is not None, auth_token, max_frame),
                 daemon=True)
             for sl in slices if len(sl)]
         reports: List[WindowReport] = []
         spans: List[Tuple[float, float]] = []
+        pending_plans: List[dict] = []
         try:
             for p in procs:
                 p.start()
-            if not server.wait_connections(W, timeout=window_timeout):
+            connected = (tree.wait_connections(W_total,
+                                               timeout=window_timeout)
+                         if tree is not None else
+                         server.wait_connections(W_total,
+                                                 timeout=window_timeout))
+            if not connected:
                 raise RuntimeError(
-                    f"only {server.n_connections}/{W} daemons connected "
-                    f"within {window_timeout}s (see {log_path or 'log'})")
+                    f"fewer than {W_total} daemons connected within "
+                    f"{window_timeout}s (see {log_path or 'log'})")
             for i in range(self.n_windows):
                 self.sim.faults = self.faults_at(i)
                 t0 = self.sim.anchor_clock
@@ -263,22 +306,44 @@ class ScenarioRunner:
                 self.pipeline.feed_anchors(anchors)
                 self.pipeline.poll_blockage(self.sim.anchor_clock)
                 rates = self.pipeline.rates()
-                server.broadcast(framing.window_start_msg(i, rates))
-                batch = collector.wait_window(i, timeout=window_timeout)
-                server.log(f"window {i} assembled: {len(batch.uploads)}/"
-                           f"{W} uploads, missing={batch.missing}, "
+                active = [int(w) for w in self.sim.active_workers]
+                if need_membership:
+                    # expected sets follow the mesh BEFORE the window
+                    # opens (the tree root re-keys inside broadcast();
+                    # leaves re-key from the frame's membership field)
+                    if tree is None:
+                        hub.set_expected(active)
+                    msg = framing.window_start_msg(
+                        i, rates, membership=active, plans=pending_plans)
+                else:
+                    msg = framing.window_start_msg(i, rates)
+                pending_plans = []
+                (tree if tree is not None else server).broadcast(msg)
+                batch = hub.wait_window(i, timeout=window_timeout)
+                server.log(f"window {i} assembled: {len(batch.present)}/"
+                           f"{len(batch.expected)} uploads, "
+                           f"missing={batch.missing}, "
                            f"dups={batch.duplicates}")
                 report = self.pipeline.window_tick_batch(
                     batch, t=self.sim.anchor_clock, rates=rates)
+                # plans the engine just executed reach the children on the
+                # NEXT window_start — same cadence as the in-process loop,
+                # where window i's mitigations first shape window i+1
+                pending_plans = [plan_to_wire(m)
+                                 for m in report.mitigations]
                 spans.append((t0, self.sim.anchor_clock))
                 reports.append(report)
                 if verbose:
                     print(f"-- window {i} (t={report.t:.1f}s, "
-                          f"present={len(batch.uploads)}/{W}, "
+                          f"present={len(batch.present)}/"
+                          f"{len(batch.expected)}, "
                           f"escalated={report.escalated})")
-                    print(report.report(W))
+                    for m in report.mitigations:
+                        print(f"   mitigation: {m}")
+                    print(report.report(len(active)))
         finally:
-            server.broadcast(framing.stop_msg())
+            (tree if tree is not None else server).broadcast(
+                framing.stop_msg())
             started = [p for p in procs if p.pid is not None]
             for p in started:
                 p.join(timeout=30)
@@ -286,17 +351,33 @@ class ScenarioRunner:
                 if p.is_alive():          # wedged child: don't hang the CI
                     p.terminate()
                     p.join(timeout=5)
-            server.stop()
+            if tree is not None:
+                tree.stop()
+            else:
+                server.stop()
         return ScenarioResult(pipeline=self.pipeline, reports=reports,
                               spans=spans)
 
 
-def _mp_worker_main(address, worker_ids, sim_cfg, schedule,
+def _mp_worker_main(addresses, worker_ids, sim_cfg, schedule,
                     seed_stride, loss, loss_seed, backend,
-                    max_queue) -> None:
+                    max_queue, mitigation=False, auth_token=None,
+                    max_frame=None) -> None:
     """Entry point of one spawned worker process: daemons for a fleet
-    slice, driven by the parent's ``window_start`` broadcasts."""
+    slice, driven by the parent's ``window_start`` broadcasts.
+
+    ``addresses[i]`` is the collector endpoint worker ``worker_ids[i]``
+    dials — the flat server, or that worker's rack LEAF in tree mode.
+
+    With ``mitigation`` the child owns its own ``MitigationEngine`` over
+    its own ``FleetSimulator`` and REPLAYS the plan deltas each
+    ``window_start`` carries (``plan_from_wire`` -> ``engine.apply``):
+    plan execution is deterministic, so the child's live-fault view and
+    mesh match the parent's exactly, one window behind the decision —
+    the same cadence the in-process loop has."""
     from repro.core.daemon import PerfTrackerDaemon
+    from repro.online.mitigation import MitigationEngine as _Engine
+    from repro.online.mitigation import plan_from_wire
     frame_filter = None
     if loss > 0.0:
         def frame_filter(msg, frame):
@@ -306,10 +387,14 @@ def _mp_worker_main(address, worker_ids, sim_cfg, schedule,
                 (loss_seed, int(msg["worker"]), int(msg["window"])))
             return [] if r.random() < loss else None
     sim = FleetSimulator(sim_cfg, [])
-    daemons = [PerfTrackerDaemon(int(w), address, backend=backend,
+    engine = _Engine(sim, schedule) if mitigation else None
+    daemons = [PerfTrackerDaemon(int(w), addr, backend=backend,
                                  max_queue=max_queue,
-                                 frame_filter=frame_filter)
-               for w in worker_ids]
+                                 frame_filter=frame_filter,
+                                 auth_token=auth_token,
+                                 max_frame=max_frame)
+               for w, addr in zip(worker_ids, addresses)]
+    daemon_of = {int(w): d for w, d in zip(worker_ids, daemons)}
     control = daemons[0]
     try:
         while True:
@@ -321,12 +406,21 @@ def _mp_worker_main(address, worker_ids, sim_cfg, schedule,
             i = int(msg["window"])
             rates = msg.get("rates")
             rates = None if rates is None else np.asarray(rates, np.float64)
-            sim.faults = [sf.fault for sf in schedule if sf.active(i)]
+            if engine is not None:
+                for d in msg.get("plans", []):
+                    plan, applied_at = plan_from_wire(d)
+                    engine.apply(plan, applied_at)
+                sim.faults = engine.faults_at(i)
+            else:
+                sim.faults = [sf.fault for sf in schedule if sf.active(i)]
+            members = msg.get("membership")
+            mine = (list(worker_ids) if members is None
+                    else [w for w in worker_ids if w in set(members)])
             seed = sim_cfg.seed + seed_stride * (i + 1)
-            profiles = sim.profile_window_slice(worker_ids, rates=rates,
+            profiles = sim.profile_window_slice(mine, rates=rates,
                                                 seed=seed)
-            for d, p in zip(daemons, profiles):
-                d.process_window(i, p)
+            for w, p in zip(mine, profiles):
+                daemon_of[int(w)].process_window(i, p)
     finally:
         for d in daemons:
             d.close()

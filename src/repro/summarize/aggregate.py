@@ -97,6 +97,29 @@ class PatternAggregator:
                              "wrap): call reserve_workers/intern first")
         self._buf[rows, :Fb] = block
 
+    def scatter_cols(self, rows: np.ndarray, cols: np.ndarray,
+                     block: np.ndarray) -> None:
+        """Write a dense (Wb, Fb, 3) block at explicit reserved rows AND
+        explicit interned columns — the collector-tree root's scatter
+        target (DESIGN.md §10): each shard frame carries its rack's rows
+        over its own function subset, so neither axis is a prefix of the
+        root buffer."""
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        Wb, Fb = block.shape[0], block.shape[1]
+        if rows.shape != (Wb,) or cols.shape != (Fb,):
+            raise ValueError(f"rows {rows.shape}/cols {cols.shape} must "
+                             f"match block ({Wb}, {Fb}, 3)")
+        if rows.size and (int(rows.min()) < 0
+                          or int(rows.max()) >= self._n_workers):
+            raise ValueError("scatter_cols rows outside reserved "
+                             f"[0, {self._n_workers})")
+        if cols.size and (int(cols.min()) < 0
+                          or int(cols.max()) >= len(self._names)):
+            raise ValueError("scatter_cols cols outside interned "
+                             f"[0, {len(self._names)})")
+        self._buf[np.ix_(rows, cols)] = block
+
     def set_row(self, row: int, pats: Dict[str, np.ndarray],
                 kinds: Optional[Dict[str, Kind]] = None) -> int:
         """Scatter one worker's patterns at an explicit reserved row (the

@@ -1,17 +1,26 @@
-"""Real wire transport for PerfTracker pattern uploads (DESIGN.md §8):
-length-prefixed msgpack framing over Unix/TCP sockets, per-worker clients
-with bounded drop-oldest send queues, a multiplexing collector server, and
-partial-window assembly with dedup and loss accounting."""
+"""Real wire transport for PerfTracker pattern uploads (DESIGN.md §8,
+§10): length-prefixed msgpack framing over Unix/TCP sockets, per-worker
+clients with bounded drop-oldest send queues and reconnect-with-backoff,
+a multiplexing collector server with optional shared-secret auth,
+partial-window assembly with dedup and loss accounting, and a two-tier
+collector tree (leaf racks compacting shard frames into a root)."""
 from repro.transport.client import SendQueue, WireClient, connect
 from repro.transport.collector import WindowBatch, WindowCollector
 from repro.transport.framing import (FrameDecoder, MAX_FRAME_BYTES,
-                                     decode_frames, encode_frame)
+                                     decode_frames, encode_frame,
+                                     max_frame_bytes)
 from repro.transport.loopback import LoopbackWire
 from repro.transport.server import DaemonServer
+from repro.transport.tree import (CollectorTree, LeafNode, ShardCollector,
+                                  TreeWindowBatch, compact_shard,
+                                  leaf_process_main)
 
 __all__ = [
-    "FrameDecoder", "MAX_FRAME_BYTES", "decode_frames", "encode_frame",
+    "FrameDecoder", "MAX_FRAME_BYTES", "max_frame_bytes",
+    "decode_frames", "encode_frame",
     "SendQueue", "WireClient", "connect",
     "WindowBatch", "WindowCollector",
     "DaemonServer", "LoopbackWire",
+    "CollectorTree", "LeafNode", "ShardCollector", "TreeWindowBatch",
+    "compact_shard", "leaf_process_main",
 ]

@@ -12,6 +12,13 @@ evidence), so the newest window always gets a seat.  Control frames
 (``hello``/``window_end``/``bye``) are never dropped: loss accounting and
 window assembly ride on them.
 
+Reconnect policy: a lost connection (collector restart, transient accept
+failure) is re-dialed with bounded exponential backoff.  A successful
+reconnect re-sends the hello (with the auth token, when configured),
+discards the torn half-sent frame, and resumes draining the queue; the
+``reconnects`` counter rides every subsequent ``window_end`` so the
+collector's transport accounting surfaces it in reports.
+
 Loss/reorder injection for tests happens at the framing layer: a
 ``frame_filter(msg, frame) -> [frames]`` hook sees every encoded upload
 frame and may drop it (``[]``), duplicate it (``[frame, frame]``), or pass
@@ -45,7 +52,11 @@ def connect(address: Address, timeout: float = 10.0) -> socket.socket:
         sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     sock.settimeout(timeout)
-    sock.connect(address if isinstance(address, str) else tuple(address))
+    try:
+        sock.connect(address if isinstance(address, str) else tuple(address))
+    except BaseException:
+        sock.close()
+        raise
     sock.settimeout(None)
     return sock
 
@@ -95,32 +106,51 @@ class SendQueue:
 
 
 class WireClient:
-    """One worker's connection to the collector."""
+    """One worker's (or leaf uplink's) connection to a collector."""
 
     def __init__(self, address: Address, worker: int,
                  max_queue: int = 64,
                  frame_filter: Optional[FrameFilter] = None,
-                 connect_timeout: float = 10.0):
+                 connect_timeout: float = 10.0,
+                 auth_token: Optional[str] = None,
+                 role: str = "worker",
+                 max_frame: Optional[int] = None,
+                 reconnect_max: int = 5,
+                 reconnect_backoff_s: float = 0.05,
+                 reconnect_backoff_max_s: float = 1.0):
+        self.address = address
         self.worker = int(worker)
         self.frame_filter = frame_filter
+        self.auth_token = auth_token
+        self.role = role
+        self.max_frame = max_frame
         self.queue = SendQueue(max_uploads=max_queue)
         self.sent = 0                       # upload frames handed to the OS
         self.enqueued = 0                   # upload frames accepted
+        self.reconnects = 0                 # successful re-dials
+        self.reconnect_max = int(reconnect_max)
+        self.reconnect_backoff_s = float(reconnect_backoff_s)
+        self.reconnect_backoff_max_s = float(reconnect_backoff_max_s)
         self.errors: List[str] = []
         self._seq = 0
+        self._connect_timeout = float(connect_timeout)
         self._controls: "_queue.Queue[Dict]" = _queue.Queue()
         self._sock = connect(address, timeout=connect_timeout)
         self._sock.setblocking(False)
         self._wake_r, self._wake_w = os.pipe()
         self._outbuf = bytearray()
-        self._decoder = framing.FrameDecoder()
+        self._decoder = framing.FrameDecoder(max_frame=max_frame)
         self._stop = threading.Event()
         self._idle = threading.Event()      # set while queue+outbuf empty
         self._idle.set()
-        self.queue.put(framing.hello_msg(self.worker), droppable=False)
+        self.queue.put(self._hello(), droppable=False)
         self._thread = threading.Thread(
             target=self._run, name=f"wire-client-{worker}", daemon=True)
         self._thread.start()
+
+    def _hello(self) -> Dict:
+        return framing.hello_msg(self.worker, token=self.auth_token,
+                                 role=self.role)
 
     # -- daemon-facing API --------------------------------------------------
     @property
@@ -137,6 +167,13 @@ class WireClient:
         self.queue.put(framing.upload_msg(window, upload, seq))
         self._notify()
         return seq
+
+    def send_msg(self, msg: Dict, droppable: bool = False) -> None:
+        """Enqueue one pre-built protocol message (leaf uplinks forward
+        compacted shard frames with this; shard frames are control-grade:
+        never dropped by backpressure)."""
+        self.queue.put(msg, droppable=droppable)
+        self._notify()
 
     def end_window(self, window: int) -> None:
         """Close one window on the wire.  The frame's counters are
@@ -201,8 +238,9 @@ class WireClient:
             if msg.get("t") == "_window_end":
                 msg = framing.window_end_msg(
                     msg["window"], self.worker,
-                    sent=self.sent, dropped=self.queue.dropped)
-            frame = framing.encode_frame(msg)
+                    sent=self.sent, dropped=self.queue.dropped,
+                    reconnects=self.reconnects)
+            frame = framing.encode_frame(msg, max_frame=self.max_frame)
             if droppable:
                 self.sent += 1
                 if self.frame_filter is not None:
@@ -215,21 +253,66 @@ class WireClient:
             else:
                 self._outbuf += frame
 
+    def _reconnect(self, sel: selectors.BaseSelector) -> bool:
+        """Bounded-exponential-backoff re-dial after a lost connection.
+        On success: fresh socket registered, decoder reset, torn outbuf
+        replaced by a new hello.  Returns False when out of attempts or
+        stopping — the caller exits the sender loop."""
+        try:
+            sel.unregister(self._sock)
+        except (KeyError, ValueError):
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        delay = self.reconnect_backoff_s
+        for attempt in range(self.reconnect_max):
+            if self._stop.is_set():
+                return False
+            self._stop.wait(delay)
+            delay = min(2 * delay, self.reconnect_backoff_max_s)
+            if self._stop.is_set():
+                return False
+            try:
+                self._sock = connect(self.address,
+                                     timeout=self._connect_timeout)
+            except OSError:
+                continue
+            self._sock.setblocking(False)
+            self._decoder = framing.FrameDecoder(max_frame=self.max_frame)
+            # the half-sent frame is torn — restarting it would corrupt the
+            # stream; re-introduce ourselves instead and resume the queue
+            self._outbuf = bytearray(
+                framing.encode_frame(self._hello(),
+                                     max_frame=self.max_frame))
+            self.reconnects += 1
+            sel.register(self._sock, selectors.EVENT_READ
+                         | selectors.EVENT_WRITE)
+            return True
+        self.errors.append(
+            f"reconnect failed after {self.reconnect_max} attempts")
+        return False
+
     def _run(self) -> None:
         sel = selectors.DefaultSelector()
         sel.register(self._sock, selectors.EVENT_READ)
         sel.register(self._wake_r, selectors.EVENT_READ)
+        registered = selectors.EVENT_READ
         try:
             while not self._stop.is_set():
                 if not self._outbuf:
                     self._encode_next()
                 want = selectors.EVENT_READ | (
                     selectors.EVENT_WRITE if self._outbuf else 0)
-                sel.modify(self._sock, want)
+                if want != registered:
+                    sel.modify(self._sock, want)
+                    registered = want
                 if not self._outbuf and not len(self.queue):
                     self._idle.set()
                     if len(self.queue):   # raced with a concurrent put
                         self._idle.clear()
+                lost = False
                 for key, events in sel.select(timeout=0.2):
                     if key.fd == self._wake_r:
                         try:
@@ -239,9 +322,17 @@ class WireClient:
                         continue
                     if events & selectors.EVENT_READ:
                         if not self._read():
-                            return
+                            lost = True
+                            break
                     if events & selectors.EVENT_WRITE and self._outbuf:
-                        self._write()
+                        if not self._write():
+                            lost = True
+                            break
+                if lost:
+                    if self._stop.is_set() or not self._reconnect(sel):
+                        return
+                    registered = selectors.EVENT_READ \
+                        | selectors.EVENT_WRITE
         except Exception as e:                      # pragma: no cover
             self.errors.append(f"{type(e).__name__}: {e}")
         finally:
@@ -263,13 +354,13 @@ class WireClient:
             self._controls.put(msg)
         return True
 
-    def _write(self) -> None:
+    def _write(self) -> bool:
         try:
             n = self._sock.send(self._outbuf)
         except BlockingIOError:
-            return
+            return True
         except OSError as e:
             self.errors.append(f"send: {e}")
-            self._stop.set()
-            return
+            return False
         del self._outbuf[:n]
+        return True

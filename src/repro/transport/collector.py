@@ -42,6 +42,7 @@ class WindowBatch:
     ended: Set[int] = field(default_factory=set)
     duplicates: int = 0                       # deduped (window, worker) copies
     client_dropped: int = 0                   # cumulative backpressure drops
+    reconnects: int = 0                       # cumulative client re-dials
     timed_out: bool = False                   # wait_window hit its deadline
 
     @property
@@ -74,6 +75,7 @@ class WindowBatch:
                 "missing": self.missing,
                 "duplicates": self.duplicates,
                 "client_dropped": self.client_dropped,
+                "reconnects": self.reconnects,
                 "timed_out": self.timed_out}
 
 
@@ -83,8 +85,10 @@ class WindowCollector:
     def __init__(self, expected_workers: Sequence[int]):
         self.expected = tuple(sorted(int(w) for w in expected_workers))
         self._batches: Dict[int, WindowBatch] = {}
-        #: latest cumulative drop counter per worker (from window_end)
+        #: latest cumulative drop/reconnect counters per worker
+        #: (from window_end)
         self._drops: Dict[int, int] = {}
+        self._reconnects: Dict[int, int] = {}
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         #: highest window index already handed out by wait_window; frames
@@ -128,6 +132,8 @@ class WindowCollector:
                 b = self._batch(int(msg["window"]))
                 b.ended.add(int(msg["worker"]))
                 self._drops[int(msg["worker"])] = int(msg.get("dropped", 0))
+                self._reconnects[int(msg["worker"])] = \
+                    int(msg.get("reconnects", 0))
                 if b.ended >= set(self.expected):
                     self._cv.notify_all()
 
@@ -135,6 +141,18 @@ class WindowCollector:
     def client_dropped(self) -> int:
         with self._lock:
             return sum(self._drops.values())
+
+    def set_expected(self, workers: Sequence[int]) -> None:
+        """Re-key the expected worker set when the training mesh changes
+        (control-plane membership delta, DESIGN.md §10).  Applies to all
+        OPEN batches too: a window opened under the old mesh but not yet
+        popped completes under the new one — mitigated-away workers stop
+        being owed, replacements start being owed."""
+        with self._cv:
+            self.expected = tuple(sorted(int(w) for w in workers))
+            for b in self._batches.values():
+                b.expected = self.expected
+            self._cv.notify_all()
 
     def wait_window(self, window: int, timeout: float = 30.0) -> WindowBatch:
         """Block until every expected worker ended ``window`` (or timeout);
@@ -154,4 +172,5 @@ class WindowCollector:
             self._batches.pop(window, None)
             self._popped_through = max(self._popped_through, window)
             b.client_dropped = sum(self._drops.values())
+            b.reconnects = sum(self._reconnects.values())
             return b

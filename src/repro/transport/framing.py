@@ -1,4 +1,4 @@
-"""Wire framing for PerfTracker pattern uploads (DESIGN.md §8).
+"""Wire framing for PerfTracker pattern uploads (DESIGN.md §8, §10).
 
 One frame = a 4-byte big-endian unsigned length prefix followed by exactly
 that many bytes of msgpack.  Length-prefixing (rather than delimiters) is
@@ -9,47 +9,89 @@ boundary and yields only complete frames.
 
 Every frame body is a msgpack map with a ``"t"`` type tag:
 
-  ``hello``        client -> server   {worker}
+  ``hello``        client -> server   {worker, role?, token?}
+                   (``token`` is the optional shared-secret for an
+                   authenticated collector; ``role`` distinguishes leaf
+                   uplinks of a collector tree from worker daemons)
   ``upload``       client -> server   {window, worker, seq, payload,
                                        summarize_s, raw_bytes}
-  ``window_end``   client -> server   {window, worker, sent, dropped}
+  ``window_end``   client -> server   {window, worker, sent, dropped,
+                                       reconnects}
                    (cumulative counters; ``dropped`` is the client-side
-                   backpressure drop count — the collector's loss
+                   backpressure drop count and ``reconnects`` the number
+                   of times the client re-dialed the collector — loss
                    accounting rides on this frame, which is never dropped)
-  ``window_start`` server -> client   {window, rates | None, stop: False}
+  ``shard``        leaf -> root       one COMPACTED rack window: packed
+                   columnar patterns (float32 rows), present workers,
+                   missing/dup/drop counters (DESIGN.md §10)
+  ``window_start`` server -> client   {window, rates | None, stop: False,
+                                       membership?, plans?}
+                   (``membership`` is the current training-mesh worker
+                   set and ``plans`` the mitigation actions applied since
+                   the previous window — the control-plane deltas worker
+                   processes replay onto their own simulators)
   ``stop``         server -> client   {}
   ``bye``          client -> server   {worker}
 
 The per-frame size cap rejects corrupt prefixes before they turn into a
-multi-GB allocation; real pattern uploads are ~KB (paper Fig. 11).
+multi-GB allocation.  Most frames are ~KB (paper Fig. 11), but the cap is
+DERIVED from fleet size when known (``max_frame_bytes``): a ``window_start``
+carries one rate per worker plus membership and mitigation deltas, and a
+per-shard compaction frame carries a whole rack's columnar pattern block —
+at W=1024+ those legitimately outgrow any fixed small bound.
 """
 from __future__ import annotations
 
 import struct
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import msgpack
 
-#: frames above this are a protocol error (pattern uploads are ~KB; the
-#: largest legitimate frame is a window_start carrying one float per worker)
+#: default per-frame cap when the fleet size is unknown (pattern uploads
+#: are ~KB; this bound only exists to reject corrupt length prefixes)
 MAX_FRAME_BYTES = 16 * 1024 * 1024
+
+#: per-worker budget for fleet-shaped frames: a worker's share of a shard
+#: frame (F functions x 3 float32 + interned names) plus its entries in
+#: window_start rates/membership/plan deltas, with generous headroom
+PER_WORKER_FRAME_BYTES = 16 * 1024
+
+#: fleet-size-independent headroom (frame schema, names, counters)
+FRAME_OVERHEAD_BYTES = 1024 * 1024
+
+
+def max_frame_bytes(fleet_size: Optional[int] = None) -> int:
+    """The per-frame size cap for a deployment of ``fleet_size`` workers.
+
+    ``None`` (unknown fleet) keeps the fixed default; otherwise the cap
+    grows linearly with the fleet so the legitimate big frames — a
+    ``window_start`` carrying per-worker rates + membership + mitigation
+    deltas, a per-shard columnar compaction frame — are never rejected at
+    scale, while corrupt prefixes still die quickly."""
+    if fleet_size is None:
+        return MAX_FRAME_BYTES
+    return max(MAX_FRAME_BYTES,
+               FRAME_OVERHEAD_BYTES
+               + PER_WORKER_FRAME_BYTES * int(fleet_size))
+
 
 _LEN = struct.Struct(">I")
 
 
-def encode_frame(msg: Dict) -> bytes:
+def encode_frame(msg: Dict, max_frame: Optional[int] = None) -> bytes:
     """Serialize one protocol message into a length-prefixed frame."""
+    cap = MAX_FRAME_BYTES if max_frame is None else int(max_frame)
     body = msgpack.packb(msg, use_bin_type=True)
-    if len(body) > MAX_FRAME_BYTES:
+    if len(body) > cap:
         raise ValueError(f"frame body {len(body)}B exceeds "
-                         f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+                         f"max frame size {cap}B")
     return _LEN.pack(len(body)) + body
 
 
-def decode_frames(data: bytes) -> List[Dict]:
+def decode_frames(data: bytes, max_frame: Optional[int] = None) -> List[Dict]:
     """Decode a byte string holding zero or more COMPLETE frames (tests /
     one-shot paths; streaming callers use ``FrameDecoder``)."""
-    dec = FrameDecoder()
+    dec = FrameDecoder(max_frame=max_frame)
     out = list(dec.feed(data))
     if dec.pending_bytes:
         raise ValueError(f"{dec.pending_bytes} trailing bytes do not form "
@@ -62,10 +104,12 @@ class FrameDecoder:
 
     ``feed`` accepts whatever one ``recv`` returned — half a length prefix,
     three frames and a torn fourth — and yields each message exactly once,
-    as soon as its final byte arrives.
-    """
+    as soon as its final byte arrives.  ``max_frame`` bounds a single
+    frame (``max_frame_bytes(fleet_size)`` for fleet-shaped streams)."""
 
-    def __init__(self) -> None:
+    def __init__(self, max_frame: Optional[int] = None) -> None:
+        self.max_frame = MAX_FRAME_BYTES if max_frame is None \
+            else int(max_frame)
         self._buf = bytearray()
         self._need: Optional[int] = None     # body length once prefix parsed
 
@@ -80,10 +124,10 @@ class FrameDecoder:
                 if len(self._buf) < _LEN.size:
                     return
                 (self._need,) = _LEN.unpack_from(self._buf)
-                if self._need > MAX_FRAME_BYTES:
+                if self._need > self.max_frame:
                     raise ValueError(
                         f"frame length {self._need}B exceeds "
-                        f"MAX_FRAME_BYTES={MAX_FRAME_BYTES} "
+                        f"max frame size {self.max_frame}B "
                         "(corrupt stream?)")
                 del self._buf[:_LEN.size]
             if len(self._buf) < self._need:
@@ -96,8 +140,14 @@ class FrameDecoder:
 
 # -- message constructors (one place defines the schema) ----------------------
 
-def hello_msg(worker: int) -> Dict:
-    return {"t": "hello", "worker": int(worker)}
+def hello_msg(worker: int, token: Optional[str] = None,
+              role: str = "worker") -> Dict:
+    msg: Dict = {"t": "hello", "worker": int(worker)}
+    if role != "worker":
+        msg["role"] = str(role)
+    if token is not None:
+        msg["token"] = str(token)
+    return msg
 
 
 def upload_msg(window: int, upload, seq: int) -> Dict:
@@ -117,16 +167,57 @@ def msg_to_upload(msg: Dict) -> Tuple[int, "PatternUpload"]:
         raw_bytes=int(msg["raw_bytes"]))
 
 
-def window_end_msg(window: int, worker: int, sent: int, dropped: int) -> Dict:
+def window_end_msg(window: int, worker: int, sent: int, dropped: int,
+                   reconnects: int = 0) -> Dict:
     return {"t": "window_end", "window": int(window), "worker": int(worker),
-            "sent": int(sent), "dropped": int(dropped)}
+            "sent": int(sent), "dropped": int(dropped),
+            "reconnects": int(reconnects)}
 
 
-def window_start_msg(window: int, rates=None, stop: bool = False) -> Dict:
-    return {"t": "window_start", "window": int(window),
-            "rates": (None if rates is None
-                      else [float(r) for r in rates]),
-            "stop": bool(stop)}
+def window_start_msg(window: int, rates=None, stop: bool = False,
+                     membership: Optional[Sequence[int]] = None,
+                     plans: Optional[List[Dict]] = None) -> Dict:
+    """Per-window control frame.  ``membership`` (current training-mesh
+    worker ids) and ``plans`` (mitigation deltas applied since the last
+    window, see ``repro.online.mitigation.plan_to_wire``) are the §10
+    control plane: worker processes replay them onto their own simulators
+    and collectors re-key their expected sets."""
+    msg: Dict = {"t": "window_start", "window": int(window),
+                 "rates": (None if rates is None
+                           else [float(r) for r in rates]),
+                 "stop": bool(stop)}
+    if membership is not None:
+        msg["membership"] = [int(w) for w in membership]
+    if plans:
+        msg["plans"] = list(plans)
+    return msg
+
+
+def shard_msg(window: int, shard: int, workers: Sequence[int],
+              names: Sequence[str], kinds: Sequence[int], rows: bytes,
+              missing: Sequence[int], duplicates: int, client_dropped: int,
+              reconnects: int, raw_bytes: int, pattern_bytes: int,
+              summarize_s: float, timed_out: bool) -> Dict:
+    """One compacted rack window, leaf -> root (DESIGN.md §10).
+
+    ``rows`` is the packed columnar pattern block: float32 little-endian
+    ``(len(workers), len(names), 3)``, row ``i`` belonging to
+    ``workers[i]`` (ascending).  One shard frame replaces the rack's
+    2xW_rack upload/window_end frames at the root, so root ingress is
+    O(shards) frames per window."""
+    return {"t": "shard", "window": int(window), "shard": int(shard),
+            "workers": [int(w) for w in workers],
+            "missing": [int(w) for w in missing],
+            "names": [str(n) for n in names],
+            "kinds": [int(k) for k in kinds],
+            "rows": bytes(rows),
+            "duplicates": int(duplicates),
+            "client_dropped": int(client_dropped),
+            "reconnects": int(reconnects),
+            "raw_bytes": int(raw_bytes),
+            "pattern_bytes": int(pattern_bytes),
+            "summarize_s": float(summarize_s),
+            "timed_out": bool(timed_out)}
 
 
 def stop_msg() -> Dict:

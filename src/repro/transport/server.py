@@ -30,21 +30,38 @@ Address = Union[str, Tuple[str, int]]
 
 
 class _Conn:
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket, max_frame: Optional[int] = None):
         self.sock = sock
-        self.decoder = framing.FrameDecoder()
+        self.decoder = framing.FrameDecoder(max_frame=max_frame)
         self.outbuf = bytearray()
         self.worker: Optional[int] = None    # set by the hello frame
+        self.authed = False                  # hello accepted (token checked)
+        self.registered = selectors.EVENT_READ   # current epoll interest set
 
 
 class DaemonServer:
-    """Accepts per-worker daemon connections and feeds the collector."""
+    """Accepts per-worker daemon connections and feeds the collector.
+
+    ``auth_token`` (optional shared secret) gates the hello handshake:
+    a connection whose hello carries a missing or mismatched token is
+    logged and closed before any of its frames reach the collector.
+
+    The set of client->server frame types forwarded to the collector is
+    the collector's ``HANDLED`` attribute (default: upload/window_end),
+    so the same server fronts both flat ``WindowCollector``s and the
+    root ``ShardCollector`` of a collector tree (DESIGN.md §10).
+    """
 
     def __init__(self, collector: WindowCollector,
                  address: Optional[Address] = None,
-                 log_path: Optional[str] = None):
+                 log_path: Optional[str] = None,
+                 auth_token: Optional[str] = None,
+                 max_frame: Optional[int] = None):
         self.collector = collector
         self.log_path = log_path
+        self.auth_token = auth_token
+        self.max_frame = max_frame
+        self.auth_rejected = 0               # connections refused at hello
         self._log_lock = threading.Lock()
         self._owns_socket_dir: Optional[str] = None
         if address is None:
@@ -138,7 +155,7 @@ class DaemonServer:
     def broadcast(self, msg: Dict) -> int:
         """Queue one control frame to every connected daemon; returns the
         number of recipients."""
-        frame = framing.encode_frame(msg)
+        frame = framing.encode_frame(msg, max_frame=self.max_frame)
         with self._lock:
             for conn in self._conns.values():
                 conn.outbuf += frame
@@ -166,11 +183,16 @@ class DaemonServer:
         sel.register(self._wake_r, selectors.EVENT_READ, "wake")
         try:
             while not self._stop.is_set():
+                # only touch connections whose interest set actually
+                # changed — at W=1024 a blanket sel.modify sweep is O(W)
+                # epoll_ctl syscalls per wakeup and dominates the loop
                 with self._lock:
                     for fd, conn in self._conns.items():
                         want = selectors.EVENT_READ | (
                             selectors.EVENT_WRITE if conn.outbuf else 0)
-                        sel.modify(conn.sock, want, "conn")
+                        if want != conn.registered:
+                            sel.modify(conn.sock, want, "conn")
+                            conn.registered = want
                 for key, events in sel.select(timeout=0.2):
                     if key.data == "wake":
                         try:
@@ -193,7 +215,7 @@ class DaemonServer:
             except (BlockingIOError, OSError):
                 return
             sock.setblocking(False)
-            conn = _Conn(sock)
+            conn = _Conn(sock, max_frame=self.max_frame)
             with self._lock:
                 self._conns[sock.fileno()] = conn
             sel.register(sock, selectors.EVENT_READ, "conn")
@@ -233,7 +255,9 @@ class DaemonServer:
             if data:
                 try:
                     for msg in conn.decoder.feed(data):
-                        self._dispatch(conn, msg)
+                        if not self._dispatch(conn, msg):
+                            self._close_conn(sel, sock)
+                            return
                 except ValueError as e:
                     self.log(f"framing error worker={conn.worker}: {e}")
                     self._close_conn(sel, sock)
@@ -256,12 +280,28 @@ class DaemonServer:
                 self.log(f"send error worker={conn.worker}: {e}")
                 self._close_conn(sel, sock)
 
-    def _dispatch(self, conn: _Conn, msg: Dict) -> None:
+    def _dispatch(self, conn: _Conn, msg: Dict) -> bool:
+        """Handle one decoded frame; False closes the connection."""
         t = msg.get("t")
         if t == "hello":
+            if self.auth_token is not None \
+                    and msg.get("token") != self.auth_token:
+                self.auth_rejected += 1
+                self.log(f"auth rejected worker={msg.get('worker')} "
+                         f"(missing or mismatched token)")
+                return False
             conn.worker = int(msg["worker"])
-            self.log(f"hello worker={conn.worker}")
-        elif t in ("upload", "window_end"):
+            conn.authed = True
+            role = msg.get("role", "worker")
+            self.log(f"hello worker={conn.worker} role={role}")
+            return True
+        if self.auth_token is not None and not conn.authed:
+            # nothing but a valid hello may precede authenticated traffic
+            self.auth_rejected += 1
+            self.log(f"auth rejected: {t!r} frame before hello")
+            return False
+        handled = getattr(self.collector, "HANDLED", ("upload", "window_end"))
+        if t in handled:
             if t == "window_end":
                 self.log(f"window_end window={msg.get('window')} "
                          f"worker={msg.get('worker')} "
@@ -272,3 +312,4 @@ class DaemonServer:
             self.log(f"bye worker={msg.get('worker')}")
         else:
             self.log(f"unknown frame type {t!r} from worker={conn.worker}")
+        return True

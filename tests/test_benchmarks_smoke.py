@@ -27,6 +27,9 @@ SHRINK = {
     "REPRO_BENCH_MITIGATION_W": "8",
     "REPRO_BENCH_MITIGATION_WINDOWS": "10",
     "REPRO_BENCH_MITIGATION_CASES": "C2P1_slow_dataloader",
+    "REPRO_BENCH_TREE_W": "12",
+    "REPRO_BENCH_TREE_SHARDS": "3",
+    "REPRO_BENCH_TREE_WINDOWS": "2",
 }
 
 

@@ -38,15 +38,19 @@ BASE_HZ, FULL_HZ = 250.0, 2000.0
 VERIFY, SETTLE = 2, 1
 
 
-def run_mitigated(schedule, n_windows=12, seed=5, n_standby=N_STANDBY,
-                  **kw):
+def make_mitigated(schedule, n_windows=12, seed=5, n_standby=N_STANDBY,
+                   **kw):
     esc = EscalationPolicy(n_workers=W + n_standby, base_rate_hz=BASE_HZ,
                            full_rate_hz=FULL_HZ)
-    runner = ScenarioRunner(
+    return ScenarioRunner(
         SimConfig(n_workers=W, window_s=1.0, rate_hz=FULL_HZ, seed=seed,
                   n_standby=n_standby),
         schedule, n_windows=n_windows, escalation=esc, mitigation=True,
         verify_windows=VERIFY, settle_windows=SETTLE, **kw)
+
+
+def run_mitigated(schedule, **kw):
+    runner = make_mitigated(schedule, **kw)
     return runner, runner.run()
 
 
@@ -404,9 +408,71 @@ def test_diagnosis_report_mitigation_section():
                for p in res.suggested_plans())
 
 
-def test_run_multiprocess_rejects_mitigation():
-    runner = ScenarioRunner(
-        SimConfig(n_workers=4, window_s=0.5, rate_hz=250.0, seed=1),
-        [], n_windows=1, mitigation=True)
-    with pytest.raises(NotImplementedError):
-        runner.run_multiprocess(n_procs=2)
+# -- mitigation across real process boundaries (DESIGN.md §10) ----------------
+
+def _mp_log_path(tmp_path):
+    import os
+    return os.environ.get("REPRO_WIRE_LOG",
+                          str(tmp_path / "wire-collector.log"))
+
+
+def _engine_trace(runner):
+    return [(m.window, m.plan.action, tuple(m.plan.workers),
+             tuple(m.cured), tuple(m.dropped), tuple(m.replacements))
+            for m in runner.engine.log]
+
+
+def _outcomes(res):
+    return [(i.function, i.state, i.escalations) for i in res.incidents]
+
+
+@pytest.mark.wire
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("fault,expect,action", SCENARIOS)
+def test_multiprocess_mitigation_matches_inprocess(fault, expect, action,
+                                                   tmp_path):
+    """Acceptance (ISSUE 6): ``run_multiprocess(mitigation=True)`` resolves
+    every fault in the matrix with the SAME incident outcomes as the
+    in-process PR 5 loop — plans ride the ``window_start`` control plane,
+    children replay them on their own engines, and the re-meshed
+    collectors keep assembling complete windows."""
+    sched = [ScheduledFault(fault, INJECT, 12)]
+    runner_in, res_in = run_mitigated(sched)
+    runner_mp = make_mitigated(sched)
+    res_mp = runner_mp.run_multiprocess(n_procs=4,
+                                        log_path=_mp_log_path(tmp_path))
+    # identical incident outcomes, engine actions, and final mesh
+    assert _outcomes(res_mp) == _outcomes(res_in)
+    assert _engine_trace(runner_mp) == _engine_trace(runner_in)
+    assert runner_mp.sim.active_workers == runner_in.sim.active_workers
+    # the expected plan resolved the incident within the verify ceiling
+    inc = next(i for i in res_mp.incidents if i.function == expect)
+    assert inc.state == RESOLVED and inc.escalations == 0
+    mine = [m for m in runner_mp.engine.log if m.incident_id == inc.id]
+    assert mine and mine[0].plan.action == action
+    assert res_mp.window_of(inc.resolved_at) - mine[0].window <= VERIFY
+    # every window's diagnosis matched the in-process run exactly
+    assert ([r.functions() for r in res_mp.reports]
+            == [r.functions() for r in res_in.reports])
+
+
+@pytest.mark.wire
+@pytest.mark.timeout(300)
+def test_multiprocess_mitigation_through_collector_tree(tmp_path):
+    """The same closed loop with uploads routed through the sharded
+    collector tree: membership deltas flow root -> leaf -> rack, and the
+    per-shard transport accounting surfaces in the window reports."""
+    sched = [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 12)]
+    runner_in, res_in = run_mitigated(sched)
+    runner_mp = make_mitigated(sched)
+    res_mp = runner_mp.run_multiprocess(n_procs=4, n_shards=4,
+                                        log_path=_mp_log_path(tmp_path))
+    assert _outcomes(res_mp) == _outcomes(res_in)
+    assert _engine_trace(runner_mp) == _engine_trace(runner_in)
+    assert runner_mp.sim.active_workers == runner_in.sim.active_workers
+    assert ([r.functions() for r in res_mp.reports]
+            == [r.functions() for r in res_in.reports])
+    trs = [r.transport for r in res_mp.reports if r.transport is not None]
+    assert trs and all(t["expected_shards"] == 4 for t in trs)
+    assert all(t["missing_shards"] == [] and not t["timed_out"]
+               for t in trs)

@@ -1,0 +1,316 @@
+"""ISSUE 6: sharded collector tree + wire control plane (DESIGN.md §10).
+
+Coverage:
+
+  * fleet-derived frame caps (``max_frame_bytes``) and oversize-frame
+    rejection at the derived cap;
+  * client reconnect-with-backoff across a collector restart, with the
+    ``reconnects`` counter surfacing in transport reports;
+  * the authenticated hello: matching tokens pass, mismatched/missing
+    tokens are rejected, logged, and never reach the collector;
+  * control-plane expected-set re-keying (``set_expected`` /
+    ``window_start`` membership) down the tree;
+  * shard-level failure modes at the root: duplicate shard frames deduped,
+    a whole lost rack bounded by the window timeout and surfaced in
+    ``missing_shards`` and the report;
+  * byte-parity of tree-mode diagnosis against the flat wire mode across
+    the six-fault matrix.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.daemon import PerfTrackerDaemon, summarize_and_upload
+from repro.core.events import FunctionEvent, Kind, SampleStream, WorkerProfile
+from repro.core.report import format_transport
+from repro.core.service import PerfTrackerService
+from repro.core.simulation import FleetSimulator, SimConfig
+from repro.transport import (CollectorTree, DaemonServer, FrameDecoder,
+                             ShardCollector, WindowCollector, WireClient,
+                             compact_shard, encode_frame, framing,
+                             max_frame_bytes)
+from tests.test_fleet import SCENARIOS, assert_identical
+
+
+def _upload(worker, beta=0.5):
+    """A tiny real PatternUpload."""
+    n = 64
+    prof = WorkerProfile(
+        worker=worker, window=(0.0, 1.0),
+        events=[FunctionEvent("matmul", Kind.GPU, 0.0, beta, worker)],
+        streams={"gpu_sm": SampleStream(n / 1.0, 0.0, np.full(n, 0.8))})
+    return summarize_and_upload(prof, backend="numpy")
+
+
+def _end_msg(window, worker):
+    return {"t": "window_end", "window": window, "worker": worker,
+            "sent": 1, "dropped": 0}
+
+
+def _profiles(W, faults=(), seed=7):
+    sim = FleetSimulator(SimConfig(n_workers=W, window_s=1.0, rate_hz=1000,
+                                   seed=seed), list(faults))
+    return sim.profile_window()
+
+
+# -- fleet-derived frame cap (satellite a) ------------------------------------
+
+def test_max_frame_bytes_scales_with_fleet():
+    # small fleets keep the 16 MB default floor
+    assert max_frame_bytes(None) == framing.MAX_FRAME_BYTES
+    assert max_frame_bytes(16) == framing.MAX_FRAME_BYTES
+    # past ~960 workers a full-width shard frame outgrows the default:
+    # the cap follows the fleet
+    assert max_frame_bytes(1024) == (framing.FRAME_OVERHEAD_BYTES
+                                     + 1024 * framing.PER_WORKER_FRAME_BYTES)
+    assert max_frame_bytes(1024) > framing.MAX_FRAME_BYTES
+    assert max_frame_bytes(2048) > max_frame_bytes(1024)
+
+
+def test_oversized_frame_rejected_at_derived_cap():
+    over_default = framing.MAX_FRAME_BYTES + 1
+    # a length the DEFAULT cap rejects...
+    with pytest.raises(ValueError):
+        list(FrameDecoder().feed(over_default.to_bytes(4, "big") + b"x"))
+    # ...is admitted once the cap is derived for a W=1024 fleet
+    list(FrameDecoder(max_frame=max_frame_bytes(1024))
+         .feed(over_default.to_bytes(4, "big")))
+    # explicit caps reject at both ends of the wire
+    with pytest.raises(ValueError):
+        encode_frame({"t": "upload", "payload": b"x" * 2048},
+                     max_frame=1024)
+    big = encode_frame({"t": "upload", "payload": b"x" * 2048})
+    with pytest.raises(ValueError):
+        list(FrameDecoder(max_frame=1024).feed(big))
+
+
+# -- reconnect with backoff (satellite b) -------------------------------------
+
+@pytest.mark.timeout(60)
+def test_client_reconnects_after_collector_restart(tmp_path):
+    path = str(tmp_path / "collector.sock")
+    collector = WindowCollector([0])
+    server = DaemonServer(collector, address=path).start()
+    client = WireClient(path, worker=0, reconnect_max=100,
+                        reconnect_backoff_s=0.01,
+                        reconnect_backoff_max_s=0.05)
+    try:
+        client.send_upload(0, _upload(0))
+        client.end_window(0)
+        assert collector.wait_window(0, timeout=10.0).present == [0]
+        # collector restart: same path, fresh server
+        server.stop()
+        if os.path.exists(path):
+            os.unlink(path)
+        server2 = DaemonServer(collector, address=path).start()
+        try:
+            assert server2.wait_connections(1, timeout=20.0), \
+                "client never re-dialed the restarted collector"
+            client.send_upload(1, _upload(0))
+            client.end_window(1)
+            batch = collector.wait_window(1, timeout=10.0)
+        finally:
+            server2.stop()
+    finally:
+        client.close()
+        server.stop()
+    assert batch.present == [0] and not batch.timed_out
+    assert client.reconnects == 1
+    # the counter rides window_end into the batch stats and the report line
+    assert batch.reconnects == 1
+    assert "reconnects=1" in format_transport(batch.stats())
+
+
+def test_client_reconnect_gives_up_after_max_attempts():
+    collector = WindowCollector([0])
+    server = DaemonServer(collector).start()
+    client = WireClient(server.address, worker=0, reconnect_max=2,
+                        reconnect_backoff_s=0.01,
+                        reconnect_backoff_max_s=0.02)
+    try:
+        server.stop()                        # endpoint gone for good
+        client.send_upload(0, _upload(0))
+        client.end_window(0)
+        client._thread.join(timeout=20.0)
+        assert not client._thread.is_alive()
+        assert any("reconnect failed after 2 attempts" in e
+                   for e in client.errors)
+        assert client.reconnects == 0
+    finally:
+        client.close()
+
+
+# -- authenticated hello (satellite c) ----------------------------------------
+
+def test_auth_token_matching_passes():
+    collector = WindowCollector([0])
+    with DaemonServer(collector, auth_token="s3cret") as server:
+        client = WireClient(server.address, 0, auth_token="s3cret")
+        try:
+            client.send_upload(0, _upload(0))
+            client.end_window(0)
+            batch = collector.wait_window(0, timeout=10.0)
+        finally:
+            client.close()
+        assert server.auth_rejected == 0
+    assert batch.present == [0] and not batch.timed_out
+
+
+def test_auth_token_mismatched_and_missing_rejected(tmp_path):
+    log = str(tmp_path / "wire.log")
+    collector = WindowCollector([0, 1])
+    with DaemonServer(collector, auth_token="s3cret",
+                      log_path=log) as server:
+        bad = WireClient(server.address, 0, auth_token="wrong",
+                         reconnect_max=1, reconnect_backoff_s=0.01,
+                         reconnect_backoff_max_s=0.02)
+        missing = WireClient(server.address, 1,
+                             reconnect_max=1, reconnect_backoff_s=0.01,
+                             reconnect_backoff_max_s=0.02)
+        try:
+            bad.send_upload(0, _upload(0))
+            bad.end_window(0)
+            missing.send_upload(0, _upload(1))
+            missing.end_window(0)
+            batch = collector.wait_window(0, timeout=1.0)
+        finally:
+            bad.close()
+            missing.close()
+        assert server.auth_rejected >= 2
+    # nothing from either client ever reached the collector
+    assert batch.timed_out and batch.present == []
+    with open(log) as f:
+        assert "auth rejected" in f.read()
+
+
+# -- control plane: expected-set re-keying ------------------------------------
+
+def test_set_expected_completes_open_batches():
+    coll = WindowCollector([0, 1, 2])
+    for w in (0, 1):
+        coll.on_message(framing.upload_msg(0, _upload(w), 0))
+        coll.on_message(_end_msg(0, w))
+    # worker 2 was replaced out of the mesh: the OPEN window re-keys too
+    coll.set_expected([0, 1])
+    batch = coll.wait_window(0, timeout=5.0)
+    assert not batch.timed_out and batch.complete
+    assert batch.present == [0, 1] and batch.missing == []
+
+
+@pytest.mark.timeout(120)
+def test_window_start_membership_rekeys_tree():
+    W, gone = 6, 3
+    profiles = _profiles(W)
+    members = [w for w in range(W) if w != gone]
+    with CollectorTree(range(W), 2) as tree:
+        daemons = {w: PerfTrackerDaemon(w, tree.address_of(w),
+                                        backend="numpy") for w in members}
+        try:
+            tree.wait_connections(len(members))
+            tree.broadcast(framing.window_start_msg(0, None,
+                                                    membership=members))
+            for w, d in daemons.items():
+                d.process_window(0, profiles[w])
+            batch = tree.wait_window(0, timeout=30.0)
+        finally:
+            for d in daemons.values():
+                d.close()
+    # the absent worker is OUT OF THE MESH, not missing: both the leaf
+    # owning it and the root stopped expecting it
+    assert not batch.timed_out and batch.complete
+    assert batch.present == members and batch.missing == []
+    assert gone not in batch.expected
+
+
+# -- shard-level failure modes (satellite d) ----------------------------------
+
+def _shard_frame(shard, workers, window=0):
+    coll = WindowCollector(workers)
+    for w in workers:
+        coll.on_message(framing.upload_msg(window, _upload(w), 0))
+        coll.on_message(_end_msg(window, w))
+    return compact_shard(shard, coll.wait_window(window, timeout=5.0))
+
+
+def test_shard_collector_dedups_duplicate_shard_frames():
+    sc = ShardCollector({0: (0, 1), 1: (2, 3)})
+    f0 = _shard_frame(0, (0, 1))
+    sc.on_message(f0)
+    sc.on_message(dict(f0))              # replayed shard frame
+    sc.on_message(_shard_frame(1, (2, 3)))
+    batch = sc.wait_window(0, timeout=5.0)
+    assert not batch.timed_out
+    assert batch.duplicate_shards == 1 and sc.total_duplicate_shards == 1
+    assert len(batch.shards) == 2
+    assert batch.present == [0, 1, 2, 3]
+    assert "duplicate_shards=1" in format_transport(batch.stats())
+
+
+def test_shard_collector_reports_lost_rack():
+    sc = ShardCollector({0: (0, 1), 1: (2, 3)})
+    sc.on_message(_shard_frame(0, (0, 1)))
+    batch = sc.wait_window(0, timeout=0.3)
+    assert batch.timed_out
+    assert batch.missing_shards == [1]
+    assert batch.present == [0, 1] and batch.missing == [2, 3]
+    agg, present = batch.aggregate(4)
+    np.testing.assert_array_equal(present, [True, True, False, False])
+    pats, _ = agg.finalize()
+    # the lost rack's rows stay zero (masked out of localization)
+    assert pats and all(np.all(np.asarray(p)[[2, 3]] == 0)
+                        for p in pats.values())
+
+
+@pytest.mark.timeout(120)
+def test_tree_survives_lost_rack_end_to_end():
+    W = 9
+    profiles = _profiles(W)
+    with CollectorTree(range(W), 3, window_timeout=5.0) as tree:
+        alive = [w for s in (0, 2) for w in tree.shard_workers[s]]
+        tree.leaves[1].stop()            # the whole rack dies
+        daemons = {w: PerfTrackerDaemon(w, tree.address_of(w),
+                                        backend="numpy") for w in alive}
+        try:
+            tree.broadcast(framing.window_start_msg(0, None))
+            for w, d in daemons.items():
+                d.process_window(0, profiles[w])
+            batch = tree.wait_window(0, timeout=3.0)
+        finally:
+            for d in daemons.values():
+                d.close()
+        lost = list(tree.shard_workers[1])
+    assert batch.timed_out and batch.missing_shards == [1]
+    assert batch.missing == lost and batch.present == alive
+    res = PerfTrackerService().diagnose_batch(batch, fleet_size=W)
+    assert "collector tree 2/3 shards reported" in res.report()
+    assert "missing_shards=[1]" in res.report()
+
+
+# -- six-fault matrix: tree mode is byte-identical to flat wire mode ----------
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("faults,expect,kind", SCENARIOS)
+def test_tree_mode_matches_flat_wire_mode(faults, expect, kind):
+    W = 16
+    profiles = _profiles(W, faults)
+    flat = PerfTrackerService(summarize_backend="numpy").diagnose_profiles(
+        profiles, mode="wire")
+    with CollectorTree(range(W), 4) as tree:
+        daemons = [PerfTrackerDaemon(p.worker, tree.address_of(p.worker),
+                                     backend="numpy") for p in profiles]
+        try:
+            tree.wait_connections(W)
+            tree.broadcast(framing.window_start_msg(0, None))
+            for d, p in zip(daemons, profiles):
+                d.process_window(0, p)
+            batch = tree.wait_window(0, timeout=30.0)
+        finally:
+            for d in daemons:
+                d.close()
+    assert not batch.timed_out
+    assert batch.missing == [] and batch.missing_shards == []
+    treed = PerfTrackerService().diagnose_batch(batch, fleet_size=W)
+    assert any(expect in f for f in treed.functions())
+    assert treed.diagnoses[0].abnormality.kind == kind
+    assert_identical(treed, flat)
