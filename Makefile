@@ -1,8 +1,8 @@
 PY ?= python
 
-.PHONY: test test-wire test-cov deps lint bench bench-summarize bench-fleet \
-        bench-online bench-wire bench-mitigation bench-tree bench-gate \
-        bench-gate-update
+.PHONY: test test-wire test-train test-cov deps lint bench bench-summarize \
+        bench-fleet bench-online bench-wire bench-mitigation bench-tree \
+        bench-overhead bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -15,6 +15,11 @@ test:
 # per-test timeouts via pytest-timeout so a hung socket cannot wedge CI
 test-wire:
 	PYTHONPATH=src $(PY) -m pytest -q -m wire --timeout=300
+
+# real-trainer workload tests only (the CI `train` job): jit-compiled
+# training loops, live fault scenarios, multi-process socket integration
+test-train:
+	PYTHONPATH=src $(PY) -m pytest -q -m train --timeout=600
 
 # the committed coverage floor: `make test-cov` fails if total line
 # coverage of src/repro drops below it.  Raise it when coverage improves;
@@ -54,10 +59,15 @@ bench-mitigation:
 bench-tree:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only collector_tree
 
+# tracer overhead on the real instrumented training loop (ISSUE 7); the
+# gate is the declared budget (REPRO_TRAIN_OVERHEAD_BUDGET_PCT)
+bench-overhead:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only train_overhead
+
 # the CI benchmark-regression gate: run the six gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,collector_tree
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,collector_tree,train_overhead
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

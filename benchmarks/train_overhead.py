@@ -1,0 +1,74 @@
+"""ISSUE 7: tracer overhead on the REAL instrumented training loop.
+
+``Trainer.train_iteration`` runs the same fenced split-step whether or not
+a ``Tracer`` observes it, so the tracer-on / tracer-off delta isolates
+exactly what instrumentation costs: the phase context managers, the
+HLO-cost sub-event records, and the background ``ProcessSampler`` thread
+at the production 100 Hz rate.  The gate is the declared budget, not an
+absolute time: ``within_budget=Y`` iff the median-step inflation stays
+under ``REPRO_TRAIN_OVERHEAD_BUDGET_PCT`` (default 25%, roomy enough for
+shared-runner noise on a sub-10ms step; the honest figure is ~1-3%).
+
+Shrink knobs: ``REPRO_BENCH_TRAIN_OVERHEAD_ITERS`` plus the
+``REPRO_TRAIN_*`` model-size knobs ``tiny_train_setup`` reads.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+ITERS = int(os.environ.get("REPRO_BENCH_TRAIN_OVERHEAD_ITERS", "30"))
+BUDGET_PCT = float(os.environ.get("REPRO_TRAIN_OVERHEAD_BUDGET_PCT", "25"))
+
+
+def _block_s(trainer, state, n, tracer=None):
+    params, opt_state = state
+    if tracer is not None:
+        tracer.start_window()
+    durs = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        params, opt_state, _ = trainer.train_iteration(params, opt_state,
+                                                       tracer=tracer)
+        durs.append(time.perf_counter() - t0)
+    if tracer is not None:
+        tracer.stop_window()
+    state[0], state[1] = params, opt_state
+    return durs
+
+
+def run():
+    from repro.instrument.tracer import ProcessSampler, Tracer
+    from repro.train.loop import Trainer
+    from repro.train.workload import tiny_train_setup
+
+    mc, dc, oc, tc = tiny_train_setup()
+    tr = Trainer(mc, dc, oc, tc)
+    params, opt_state, _ = tr.init_state()
+    state = [params, opt_state]
+    _block_s(tr, state, 3)                             # compile + warm caches
+    tracer = Tracer(worker=0, samplers={"cpu": ProcessSampler(rate_hz=100.0)})
+    # interleave off/on blocks so machine-load drift hits both sides alike
+    block = max(2, min(5, ITERS))
+    off, on = [], []
+    while len(off) < ITERS:
+        off += _block_s(tr, state, block)
+        on += _block_s(tr, state, block, tracer=tracer)
+    t_off = float(np.median(off))
+    t_on = float(np.median(on))
+    tr.loader.close()
+
+    inflation = 100.0 * (t_on / t_off - 1.0)
+    within = "Y" if inflation <= BUDGET_PCT else "N"
+    return [(
+        "train_overhead/tiny", t_on * 1e6,
+        f"off_us={t_off * 1e6:.1f};on_us={t_on * 1e6:.1f};"
+        f"inflation_pct={inflation:.2f};budget_pct={BUDGET_PCT:.1f};"
+        f"within_budget={within}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -85,6 +85,15 @@ class PerfTrackerDaemon:
         self.client.end_window(window)
         return upload
 
+    def send_anchors(self, window: int, durations) -> None:
+        """Ship a REAL workload's measured iteration durations for the
+        window (control grade — the job-level detector stream is merged
+        from these, so the frame is never dropped)."""
+        from repro.transport import framing
+        self.client.send_msg(framing.anchors_msg(window, self.worker,
+                                                 durations),
+                             droppable=False)
+
     def recv_control(self, timeout: Optional[float] = None):
         return self.client.recv_control(timeout=timeout)
 

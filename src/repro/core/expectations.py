@@ -5,6 +5,13 @@ not be bottlenecked >1% by any Python function); collective communication
 R = [0, 0.3] x [0,1] x [0,1]; GPU compute kernels are never 'unexpected'
 (R = full box). Per-family adjustments (DESIGN.md §6): MoE archs allow a
 wider collective box for all_to_all/dispatch phases.
+
+The ``host`` family (DESIGN.md §11) calibrates the Python box for ALL-HOST
+workloads — real trainers jit'd to CPU, where data loading and bookkeeping
+legitimately hold ~10% of busy samples because there is no accelerator for
+the step to hide behind.  The paper's 1% bound encodes "Python work should
+vanish next to GPU kernels"; on a host-only fleet the equivalent healthy
+ceiling is ~20%, and faults (dataloader burns, GC pauses) blow far past it.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ PYTHON_BOX: Box = ((0.0, 0.01), (0.0, 1.0), (0.0, 1.0))
 COMM_BOX: Box = ((0.0, 0.3), (0.0, 1.0), (0.0, 1.0))
 MEM_BOX: Box = ((0.0, 0.4), (0.0, 1.0), (0.0, 1.0))
 MOE_COMM_BOX: Box = ((0.0, 0.45), (0.0, 1.0), (0.0, 1.0))
+HOST_PYTHON_BOX: Box = ((0.0, 0.2), (0.0, 1.0), (0.0, 1.0))
 
 
 def expected_box(kind: Kind, name: str = "", family: str = "dense") -> Box:
@@ -33,6 +41,8 @@ def expected_box(kind: Kind, name: str = "", family: str = "dense") -> Box:
         return COMM_BOX
     if kind == Kind.MEM:
         return MEM_BOX
+    if family == "host":
+        return HOST_PYTHON_BOX
     return PYTHON_BOX
 
 

@@ -72,6 +72,17 @@ class DistCtx:
     def _named(self, spec) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 
+    def replicated(self) -> Optional[NamedSharding]:
+        """Fully-replicated placement on this mesh (None when unmeshed).
+
+        Needed wherever a shardings PYTREE is built leaf-by-leaf: a None
+        leaf inside the tree breaks ``jax.tree_util.tree_map`` structure
+        matching (None is an empty subtree, not a leaf), so scalar state
+        like the optimizer step must carry a real replicated sharding."""
+        if self.mesh is None:
+            return None
+        return self._named(P())
+
     def _dp_entry(self):
         dp = self.dp_axes
         return dp if len(dp) > 1 else dp[0]

@@ -7,16 +7,19 @@ fencing at phase ends; inside one jit we attribute on-device time via the
 compiled HLO cost model instead of per-op hooks (XLA fuses ops).
 
 The HostSampler thread samples real /proc/stat CPU utilization at up to
-~1 kHz into a SampleStream (the container has no GPU/ICI counters; the fleet
-simulator supplies those — same methodology as the paper's own >3k-GPU
-scaling evaluation).
+~1 kHz into a SampleStream.  The stream set is EXPLICIT per resource:
+only resources with a real sampler appear in the profile (this container
+has no GPU/ICI counters, so the default tracer exposes only ``cpu`` —
+absent streams are omitted, never faked by aliasing; the pack layer drops
+events whose resource stream is missing and the summarize engine still
+emits beta-only patterns for them).
 """
 from __future__ import annotations
 
 import threading
 import time
 from contextlib import contextmanager
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -70,6 +73,32 @@ class HostSampler:
                             values=vals)
 
 
+class ProcessSampler(HostSampler):
+    """Per-PROCESS CPU sampler (CLOCK_PROCESS_CPUTIME_ID via
+    ``time.process_time``).
+
+    The machine-wide ``/proc/stat`` sampler floors utilization at whatever
+    the host's background load is — a real trainer sleeping on a stalled
+    device still reads ~0.4 busy on a shared box.  Process CPU time reads 0
+    the moment THIS process goes idle, and at nanosecond resolution (no
+    10 ms jiffy quantization), which is what makes the localizer's mu-based
+    playbook rules (GC pauses, throttling) reliable for real trainer
+    workloads (DESIGN.md §11).  Multi-threaded compute (XLA intra-op pools)
+    saturates to 1.0."""
+
+    def _run(self):
+        prev_c = time.process_time()
+        prev_w = time.perf_counter()
+        period = 1.0 / self.rate_hz
+        while not self._stop.is_set():
+            time.sleep(period)
+            c, w = time.process_time(), time.perf_counter()
+            dc, dw = c - prev_c, w - prev_w
+            prev_c, prev_w = c, w
+            util = dc / dw if dw > 0 else 0.0
+            self._vals.append(max(0.0, min(1.0, util)))
+
+
 class Tracer:
     """Records phase events; active only during a profiling window.
 
@@ -80,20 +109,33 @@ class Tracer:
     event by event.  Which backend consumes the pack is the service/daemon's
     choice (``PerfTrackerService(summarize_backend=...)`` or the
     ``REPRO_SUMMARIZE_BACKEND`` env var).
+
+    ``samplers`` maps resource name -> sampler; the default is one real
+    ``cpu`` HostSampler.  A platform with hardware counters registers more
+    (``gpu_sm``/``pcie_tx``/``membw``) — resources without a sampler are
+    simply absent from the profile's stream set, not faked.
     """
 
     def __init__(self, worker: int = 0, pack: bool = True,
-                 rate_hz: float = 500.0):
+                 rate_hz: float = 500.0,
+                 samplers: Optional[Dict[str, HostSampler]] = None):
         self.worker = worker
         self.pack = pack
         self.events: List[FunctionEvent] = []
         self.active = False
         self._window_start = 0.0
-        self.sampler = HostSampler(rate_hz=rate_hz)
+        self.samplers: Dict[str, HostSampler] = (
+            dict(samplers) if samplers is not None
+            else {"cpu": HostSampler(rate_hz=rate_hz)})
+
+    @property
+    def sampler(self) -> HostSampler:
+        """The cpu sampler (back-compat alias for the single-sampler API)."""
+        return self.samplers["cpu"]
 
     @property
     def rate_hz(self) -> float:
-        return self.sampler.rate_hz
+        return self.samplers["cpu"].rate_hz
 
     def set_rate(self, rate_hz: float) -> None:
         """Differential escalation (DESIGN.md §7): the service retunes each
@@ -103,28 +145,31 @@ class Tracer:
         its rate once at start)."""
         if self.active:
             raise RuntimeError("cannot retune rate_hz mid-window")
-        self.sampler.rate_hz = float(rate_hz)
+        for s in self.samplers.values():
+            s.rate_hz = float(rate_hz)
 
     def start_window(self):
         self.events = []
         self.active = True
         self._window_start = time.perf_counter()
-        self.sampler.start()
+        for s in self.samplers.values():
+            s.start()
 
     def stop_window(self) -> WorkerProfile:
         self.active = False
-        stream = self.sampler.stop()
         t0 = self._window_start
+        streams: Dict[str, SampleStream] = {}
+        for res, sampler in self.samplers.items():
+            s = sampler.stop()
+            streams[res] = SampleStream(s.rate_hz, 0.0, s.values)
         end = time.perf_counter()
         events = [
             FunctionEvent(e.name, e.kind, e.start - t0, e.end - t0,
                           self.worker, e.thread, e.depth, e.resource)
             for e in self.events]
-        stream = SampleStream(stream.rate_hz, 0.0, stream.values)
         profile = WorkerProfile(
             worker=self.worker, window=(0.0, end - t0), events=events,
-            streams={"cpu": stream, "gpu_sm": stream, "pcie_tx": stream,
-                     "membw": stream})
+            streams=streams)
         if self.pack:
             from repro.summarize.packing import pack_profile
             profile.packed = pack_profile(profile)
@@ -132,7 +177,7 @@ class Tracer:
 
     @contextmanager
     def phase(self, name: str, kind: Kind = Kind.PYTHON, depth: int = 1,
-              fence=None):
+              fence=None, resource: str = ""):
         if not self.active:
             yield
             return
@@ -145,4 +190,16 @@ class Tracer:
                 jax.block_until_ready(fence() if callable(fence) else fence)
             self.events.append(FunctionEvent(
                 name, kind, t0, time.perf_counter(), self.worker,
-                depth=depth))
+                depth=depth, resource=resource))
+
+    def add_event(self, name: str, kind: Kind, start: float, end: float,
+                  depth: int = 2, resource: str = "") -> None:
+        """Record a sub-event with explicit absolute perf_counter times —
+        used for HLO-cost attribution inside a fused jit step, where the
+        host never observes per-op boundaries and we split the fenced span
+        by the compiled cost model instead."""
+        if not self.active:
+            return
+        self.events.append(FunctionEvent(
+            name, kind, start, end, self.worker, depth=depth,
+            resource=resource))

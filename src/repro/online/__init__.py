@@ -12,6 +12,9 @@ from repro.online.mitigation import (DEFAULT_CURES, AppliedMitigation,
 from repro.online.pipeline import OnlinePipeline, WindowReport
 from repro.online.scenario import (ScenarioResult, ScenarioRunner,
                                    ScheduledFault, default_detector_cfg)
+from repro.online.workload import (SimWorkload, WindowData, WorkloadSource,
+                                   merge_anchor_durations,
+                                   synth_anchor_events)
 
 __all__ = [
     "EmaPatternAggregator", "EscalationPolicy",
@@ -22,4 +25,6 @@ __all__ = [
     "OnlinePipeline", "WindowReport",
     "ScenarioResult", "ScenarioRunner", "ScheduledFault",
     "default_detector_cfg",
+    "WorkloadSource", "SimWorkload", "WindowData",
+    "merge_anchor_durations", "synth_anchor_events",
 ]

@@ -25,6 +25,15 @@ own incident.
 ``PerfTrackerDaemon`` + simulator over their slice of the fleet and upload
 ~KB patterns over the wire transport; the parent runs detection, window
 assembly (loss-tolerant), localization, and incident lifecycles.
+
+Profile production is pluggable (DESIGN.md §11): the runner drives any
+``WorkloadSource``.  With no explicit workload it builds the historical
+``FleetSimulator`` path (``SimWorkload`` — byte-identical to the
+pre-refactor loop); pass a ``repro.train.workload.TrainerWorkload`` to run
+the identical detect -> summarize -> localize -> incident machinery over
+REAL jit'd training processes, whose measured iteration durations arrive
+as ``anchors`` wire frames and are merged (max per index) into the
+job-level detector stream.
 """
 from __future__ import annotations
 
@@ -41,6 +50,9 @@ from repro.core.simulation import FleetSimulator, SimConfig
 from repro.online.escalation import EscalationPolicy
 from repro.online.mitigation import MitigationEngine, plan_to_wire
 from repro.online.pipeline import OnlinePipeline, WindowReport
+from repro.online.workload import (SimWorkload, WorkloadSource,
+                                   merge_anchor_durations,
+                                   synth_anchor_events)
 
 #: per-window profile seed offset (must match _mp_worker_main)
 _WINDOW_SEED_STRIDE = 7919
@@ -120,7 +132,7 @@ def default_detector_cfg(iters_per_window: int) -> DetectorConfig:
 
 
 class ScenarioRunner:
-    def __init__(self, sim_cfg: SimConfig,
+    def __init__(self, sim_cfg: Optional[SimConfig],
                  schedule: Sequence[ScheduledFault],
                  n_windows: int = 8, iters_per_window: int = 24,
                  escalation: Optional[EscalationPolicy] = None,
@@ -128,16 +140,29 @@ class ScenarioRunner:
                  summarize_backend="numpy", alpha: float = 0.6,
                  clear_windows: int = 2, mitigation: bool = False,
                  verify_windows: int = 2, max_escalations: int = 2,
-                 settle_windows: int = 1):
+                 settle_windows: int = 1,
+                 workload: Optional[WorkloadSource] = None):
         self.sim_cfg = sim_cfg
         self.schedule = list(schedule)
         self.n_windows = n_windows
         self.iters_per_window = iters_per_window
-        self.sim = FleetSimulator(sim_cfg, [])
+        if workload is None:
+            if sim_cfg is None:
+                raise ValueError("pass a SimConfig or a WorkloadSource")
+            self.sim = FleetSimulator(sim_cfg, [])
+            self.workload: WorkloadSource = SimWorkload(
+                self.sim, sim_cfg.seed, _WINDOW_SEED_STRIDE)
+        else:
+            if mitigation:
+                raise ValueError("mitigation closes the loop against the "
+                                 "simulator; it needs the sim workload")
+            self.sim = getattr(workload, "sim", None)
+            self.workload = workload
         # the pipeline's worker axis spans standbys too: their rows stay
         # absent (present-masked) until a re-mesh activates them
         self.pipeline = OnlinePipeline(
-            n_workers=self.sim.total_workers, family=sim_cfg.family,
+            n_workers=self.workload.total_workers,
+            family=self.workload.family,
             detector_cfg=(detector_cfg if detector_cfg is not None
                           else default_detector_cfg(iters_per_window)),
             summarize_backend=summarize_backend, alpha=alpha,
@@ -158,41 +183,39 @@ class ScenarioRunner:
             return self.engine.faults_at(window)
         return [sf.fault for sf in self.schedule if sf.active(window)]
 
-    def _window_seed(self, window: int) -> int:
-        return self.sim_cfg.seed + _WINDOW_SEED_STRIDE * (window + 1)
-
     def run(self, verbose: bool = False) -> ScenarioResult:
         reports: List[WindowReport] = []
         spans: List[Tuple[float, float]] = []
         for i in range(self.n_windows):
-            self.sim.faults = self.faults_at(i)
-            t0 = self.sim.anchor_clock
-            anchors = self.sim.anchor_events(self.iters_per_window, t0=t0)
-            self.pipeline.feed_anchors(anchors)
-            self.pipeline.poll_blockage(self.sim.anchor_clock)
+            faults = self.faults_at(i)
+            # the escalation rates are a pure read (the policy only updates
+            # at the previous window's tick), so sampling them before the
+            # workload runs is byte-identical to the historical loop order
             rates = self.pipeline.rates()
+            wd = self.workload.run_window(i, faults,
+                                          self.iters_per_window, rates)
+            self.pipeline.feed_anchors(wd.anchors)
+            self.pipeline.poll_blockage(wd.clock)
             # profiles come from the ACTIVE fleet only; with standbys
             # and/or after a re-mesh the absent rows are present-masked
             # and kept out of the mesh membership (the full-fleet path
             # stays byte-identical to the historical behavior when every
             # row is active)
-            active = self.sim.active_workers
+            active = wd.workers
             self.pipeline.set_membership(active)
-            profiles = self.sim.profile_window(
-                rates=rates, seed=self._window_seed(i))
             report = self.pipeline.window_tick(
-                profiles, t=self.sim.anchor_clock, rates=rates,
+                wd.profiles, t=wd.clock, rates=rates,
                 present_workers=(None if len(active)
                                  == self.pipeline.n_workers else active))
-            spans.append((t0, self.sim.anchor_clock))
+            spans.append((wd.t0, wd.clock))
             reports.append(report)
             if verbose:
                 print(f"-- window {i} (t={report.t:.1f}s, "
-                      f"faults={[type(f).__name__ for f in self.sim.faults]},"
+                      f"faults={[type(f).__name__ for f in faults]},"
                       f" escalated={report.escalated})")
                 for m in report.mitigations:
                     print(f"   mitigation: {m}")
-                print(report.report(self.sim_cfg.n_workers))
+                print(report.report(len(active)))
         return ScenarioResult(pipeline=self.pipeline, reports=reports,
                               spans=spans)
 
@@ -239,6 +262,26 @@ class ScenarioRunner:
         from repro.transport import (CollectorTree, DaemonServer,
                                      WindowCollector, framing,
                                      max_frame_bytes)
+        if getattr(self.workload, "is_trainer", False):
+            if n_shards is not None:
+                raise ValueError("collector-tree sharding is not supported "
+                                 "for trainer workloads (leaves compact "
+                                 "uploads; anchors frames need the flat "
+                                 "collector)")
+            if loss > 0.0:
+                raise ValueError("frame-loss injection is simulator-only; "
+                                 "trainer workloads lose frames the honest "
+                                 "way (kill the socket)")
+            return self._run_trainer_mp(n_procs=n_procs,
+                                        window_timeout=window_timeout,
+                                        log_path=log_path,
+                                        max_queue=max_queue,
+                                        auth_token=auth_token,
+                                        verbose=verbose)
+        if self.sim is None:
+            raise ValueError("run_multiprocess needs the sim or trainer "
+                             "workload (custom WorkloadSources run "
+                             "in-process via run())")
         backend = self.pipeline.service.summarize_backend
         if backend is not None and not isinstance(backend, str):
             raise ValueError("run_multiprocess needs a picklable backend "
@@ -355,6 +398,95 @@ class ScenarioRunner:
                 tree.stop()
             else:
                 server.stop()
+        return ScenarioResult(pipeline=self.pipeline, reports=reports,
+                              spans=spans)
+
+    def _run_trainer_mp(self, n_procs: int, window_timeout: float,
+                        log_path: Optional[str], max_queue: int,
+                        auth_token: Optional[str],
+                        verbose: bool) -> ScenarioResult:
+        """REAL training processes over the wire (DESIGN.md §11): each
+        spawned child runs actual ``Trainer`` instances for its fleet slice
+        (cold interpreter, own XLA compile), profiles them with the
+        ``Tracer``, and ships BOTH the pattern upload and the measured
+        iteration durations (``anchors`` frames).  The parent has no
+        simulator and builds no model — it merges the fleet's anchors into
+        the job-level detector stream and ticks the pipeline on assembled
+        batches, exactly as it does for simulated uploads."""
+        from repro.train.workload import trainer_worker_main
+        from repro.transport import (DaemonServer, WindowCollector, framing,
+                                     max_frame_bytes)
+        backend = self.pipeline.service.summarize_backend
+        if backend is not None and not isinstance(backend, str):
+            raise ValueError("run_multiprocess needs a picklable backend "
+                             "name (str or None), got an instance")
+        wl = self.workload
+        W = wl.total_workers
+        max_frame = max_frame_bytes(W)
+        collector = WindowCollector(range(W))
+        server = DaemonServer(collector, log_path=log_path,
+                              auth_token=auth_token,
+                              max_frame=max_frame).start()
+        n_procs = max(1, min(int(n_procs), W))
+        slices = np.array_split(np.arange(W), n_procs)
+        ctx = mp.get_context("spawn")
+        procs = [
+            ctx.Process(
+                target=trainer_worker_main,
+                args=([server.address] * len(sl), [int(w) for w in sl], W,
+                      wl.cfgs, self.schedule, backend, int(max_queue),
+                      auth_token, max_frame, int(self.iters_per_window),
+                      wl.rate_hz),
+                daemon=True)
+            for sl in slices if len(sl)]
+        reports: List[WindowReport] = []
+        spans: List[Tuple[float, float]] = []
+        clock = 0.0
+        try:
+            for p in procs:
+                p.start()
+            # the children compile + warm up BEFORE dialing, so the
+            # connection wait doubles as the compile barrier — give it
+            # headroom beyond the steady-state window timeout
+            if not server.wait_connections(
+                    W, timeout=max(window_timeout, 120.0)):
+                raise RuntimeError(
+                    f"fewer than {W} trainer daemons connected "
+                    f"(see {log_path or 'log'})")
+            for i in range(self.n_windows):
+                rates = self.pipeline.rates()
+                server.broadcast(framing.window_start_msg(i, rates))
+                batch = collector.wait_window(i, timeout=window_timeout)
+                server.log(f"window {i} assembled: {len(batch.present)}/"
+                           f"{len(batch.expected)} uploads, "
+                           f"anchors from {sorted(batch.anchors)}, "
+                           f"missing={batch.missing}")
+                t0 = clock
+                merged = merge_anchor_durations(
+                    [batch.anchors[w] for w in sorted(batch.anchors)])
+                anchors, clock = synth_anchor_events(merged, t0)
+                self.pipeline.feed_anchors(anchors)
+                self.pipeline.poll_blockage(clock)
+                report = self.pipeline.window_tick_batch(batch, t=clock,
+                                                         rates=rates)
+                spans.append((t0, clock))
+                reports.append(report)
+                if verbose:
+                    print(f"-- window {i} (t={report.t:.2f}s, "
+                          f"present={len(batch.present)}/"
+                          f"{len(batch.expected)}, "
+                          f"escalated={report.escalated})")
+                    print(report.report(W))
+        finally:
+            server.broadcast(framing.stop_msg())
+            started = [p for p in procs if p.pid is not None]
+            for p in started:
+                p.join(timeout=30)
+            for p in started:
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=5)
+            server.stop()
         return ScenarioResult(pipeline=self.pipeline, reports=reports,
                               spans=spans)
 

@@ -1,0 +1,143 @@
+"""WorkloadSource: where profiles and anchors come from (DESIGN.md §11).
+
+Everything downstream of profile production — detector, summarize, EMA,
+localizer, incidents, escalation, mitigation — is workload-agnostic: it
+consumes ``(anchors, profiles, membership, clock)`` per window.  This module
+names that contract.  Two implementations exist:
+
+  * ``SimWorkload`` wraps the historical ``FleetSimulator`` path
+    byte-for-byte (``ScenarioRunner`` without an explicit workload builds
+    one, so every existing scenario/benchmark is unchanged);
+  * ``TrainerWorkload`` (``repro.train.workload``) drives REAL ``Trainer``
+    instances with the ``Tracer`` wired into every phase of an actual jit'd
+    train step — anchors are measured iteration durations, profiles are
+    real host-sampled ``WorkerProfile``s.
+
+Multi-worker anchor merging: the job-level iteration detector consumes ONE
+(D, O) stream, but a fleet produces per-worker iteration durations.  A
+synchronous data-parallel step is gated by its slowest worker, so the merge
+takes the per-iteration MAX across workers and resynthesizes the anchor
+pair stream on a continuous job clock (``merge_anchor_durations`` +
+``synth_anchor_events``) — the same shape ``FleetSimulator.anchor_events``
+emits.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import WorkerProfile
+
+#: fraction of the iteration at which the optimizer.step anchor lands
+#: (matches FleetSimulator.anchor_events; the detector only consumes the
+#: D..O sequence and the D->D durations, not the interior offset)
+_OPT_ANCHOR_FRAC = 0.97
+
+
+@dataclass
+class WindowData:
+    """One profiling window's worth of workload output."""
+    anchors: List[Tuple[str, float]]     # (name, t) on the workload clock
+    profiles: List[WorkerProfile]        # active workers, ascending id
+    workers: np.ndarray                  # active (mesh-member) worker ids
+    clock: float                         # workload clock at window end
+    t0: float                            # workload clock at window start
+
+
+class WorkloadSource(ABC):
+    """Produces anchors + per-worker profiles, one window at a time."""
+
+    @property
+    @abstractmethod
+    def total_workers(self) -> int:
+        """Fleet width of the pipeline's worker axis (standbys included)."""
+
+    @property
+    @abstractmethod
+    def active_workers(self) -> np.ndarray:
+        """Current mesh membership (global worker ids, ascending)."""
+
+    @property
+    def family(self) -> str:
+        return "dense"
+
+    @abstractmethod
+    def run_window(self, window: int, faults: Sequence, iters: int,
+                   rates: Optional[np.ndarray]) -> WindowData:
+        """Advance the workload by one profiling window of ``iters``
+        iterations under the given active ``faults``, profiling at the
+        per-worker sample ``rates`` (None = deployment default)."""
+
+    def close(self) -> None:
+        """Release workload resources (loaders, threads); idempotent."""
+
+
+def merge_anchor_durations(per_worker: Sequence[Sequence[float]]
+                           ) -> List[float]:
+    """Job-level iteration durations from per-worker ones: max per
+    iteration index (a synchronous step waits for its slowest worker).
+    Ragged inputs (a worker lost mid-window) merge over the indices it
+    reported."""
+    n = max((len(d) for d in per_worker), default=0)
+    out = []
+    for i in range(n):
+        vals = [d[i] for d in per_worker if i < len(d)]
+        out.append(float(max(vals)))
+    return out
+
+
+def synth_anchor_events(durations: Sequence[float], t0: float
+                        ) -> Tuple[List[Tuple[str, float]], float]:
+    """(D, O) anchor pairs for measured iteration durations, chained on a
+    continuous clock starting at ``t0``.  Returns (events, end_clock)."""
+    out: List[Tuple[str, float]] = []
+    t = float(t0)
+    for dur in durations:
+        out.append(("dataloader.next", t))
+        out.append(("optimizer.step", t + dur * _OPT_ANCHOR_FRAC))
+        t += dur
+    return out, t
+
+
+class SimWorkload(WorkloadSource):
+    """The historical profile source: ``FleetSimulator`` synthesis.
+
+    Byte-identical to the pre-refactor ``ScenarioRunner.run`` loop: the
+    anchor stream draws from ``sim.rng`` before the (window-seeded)
+    profile materialization, faults are installed by assignment, and the
+    escalation rates the caller passes are a pure read taken before any
+    of it (the policy only updates at the previous window's tick)."""
+
+    def __init__(self, sim, seed: int, seed_stride: int):
+        self.sim = sim
+        self._seed = int(seed)
+        self._stride = int(seed_stride)
+
+    @property
+    def total_workers(self) -> int:
+        return self.sim.total_workers
+
+    @property
+    def active_workers(self) -> np.ndarray:
+        return self.sim.active_workers
+
+    @property
+    def family(self) -> str:
+        return self.sim.cfg.family
+
+    def seed_of(self, window: int) -> int:
+        return self._seed + self._stride * (window + 1)
+
+    def run_window(self, window: int, faults: Sequence, iters: int,
+                   rates: Optional[np.ndarray]) -> WindowData:
+        self.sim.faults = list(faults)
+        t0 = self.sim.anchor_clock
+        anchors = self.sim.anchor_events(iters, t0=t0)
+        profiles = self.sim.profile_window(rates=rates,
+                                           seed=self.seed_of(window))
+        return WindowData(anchors=anchors, profiles=profiles,
+                          workers=self.sim.active_workers,
+                          clock=self.sim.anchor_clock, t0=t0)

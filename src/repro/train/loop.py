@@ -1,11 +1,25 @@
 """Production training loop: jit'd train step with sharded state, PerfTracker
-attached (import-only anchors), async checkpointing, elastic restart, and
-mitigation hooks (localizer output -> checkpoint-now + re-mesh).
+attached (import-only anchors), async checkpointing, elastic restart, and a
+mitigation hook (``_maybe_mitigate``: consumes PerfTracker diagnoses as they
+land, records the planned actions, and fronts REPLACE_HOSTS/CHECKPOINT_NOW
+plans with an immediate checkpoint save — it does not re-mesh by itself).
+
+``train_iteration`` is the fully-instrumented single step the
+``TrainerWorkload`` (``repro.train.workload``) drives: every phase of a real
+jit'd step — ``dataloader.next`` / ``train.step`` (fwd+bwd, fenced with
+``block_until_ready``) / ``optimizer.step`` / ``ckpt.save`` — is recorded
+as a Tracer event, and the fused fwd+bwd span is additionally split into
+``xla.gemm`` / ``xla.other`` sub-events by the compiled module's HLO cost
+model (XLA fuses ops, so the host never sees per-op boundaries; the
+roofline split is the cost-model attribution DESIGN.md §11 describes).
 """
 from __future__ import annotations
 
+import gc
+import time
+from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +33,34 @@ from repro.dist.sharding import DistCtx
 from repro.instrument.hooks import PerfTracker, PerfTrackerConfig
 from repro.models.transformer import Transformer
 from repro.optim.adamw import AdamW, OptConfig
-from repro.train.step import make_train_step
+from repro.train.step import make_split_train_step, make_train_step
+
+#: CPU-ish roofline used to split the fused step's fenced span between the
+#: "xla.gemm" and "xla.other" cost-model sub-events (absolute values only
+#: set the split ratio; it is identical across same-program workers, so
+#: differential localization is insensitive to the constants)
+_ROOFLINE_FLOPS_S = 5e10
+_ROOFLINE_BYTES_S = 2e10
+
+
+@contextmanager
+def _noop_phase(name, kind=None, depth=1, fence=None, resource=""):
+    yield
+
+
+@dataclass
+class StepBundle:
+    """Compiled split-step executables shared across same-shape trainers.
+
+    ``grad_step`` is the AOT-compiled fwd+bwd (compiled once via
+    ``jit.lower(...).compile()`` so the same compile also yields the HLO
+    text for cost attribution); ``opt_step`` is the jitted optimizer
+    update with donated inputs.  An in-process fleet of identical tiny
+    trainers assigns one bundle to every ``Trainer.bundle`` and compiles
+    exactly once."""
+    grad_step: Callable
+    opt_step: Callable
+    gemm_frac: Optional[float]      # None = HLO cost attribution unavailable
 
 
 @dataclass
@@ -61,6 +102,18 @@ class Trainer:
         self.history: list = []
         self.mitigations: list = []
         self.last_diagnosis = None       # most recent consumed PT result
+        # split-step bundle for the instrumented train_iteration path
+        # (built lazily on first use; assignable so an in-process fleet of
+        # identical trainers shares one compile)
+        self.bundle: Optional[StepBundle] = None
+        self._step_resource = "cpu" if jax.default_backend() == "cpu" else ""
+        self._iter = 0
+        # live fault-injection hooks (repro.train.workload perturbs the
+        # REAL loop for end-to-end diagnosis scenarios); all off by default
+        self.data_burn_s = 0.0           # CPU spin inside dataloader.next
+        self.step_pad_s = 0.0            # stall inside train.step
+        self.gc_pause_s = 0.0            # gc.collect + stall, every
+        self.gc_every = 1                # gc_every iterations
 
     # ------------------------------------------------------------------
     def init_state(self, resume: bool = True):
@@ -72,18 +125,107 @@ class Trainer:
             if latest is not None:
                 shardings = None
                 if self.dist is not None and self.dist.mesh is not None:
+                    # every leaf needs a REAL sharding (a None leaf would
+                    # break tree_map structure matching in restore): scalar
+                    # opt state rides the mesh replicated
                     ps = self.dist.params_shardings(params)
                     shardings = {"params": ps,
-                                 "opt": self.opt.state_shardings(ps, None)}
-                (params, opt_state), meta = self._restore(latest, params,
-                                                          opt_state)
+                                 "opt": self.opt.state_shardings(
+                                     ps, self.dist.replicated())}
+                (params, opt_state), meta = self._restore(
+                    latest, params, opt_state, shardings)
                 start = meta["step"]
         return params, opt_state, start
 
-    def _restore(self, step, params, opt_state):
+    def _restore(self, step, params, opt_state, shardings=None):
         tree, meta = self.ckpt.restore(step, {"params": params,
-                                              "opt": opt_state})
+                                              "opt": opt_state},
+                                       shardings=shardings)
         return (tree["params"], tree["opt"]), meta
+
+    # ------------------------------------------------------------------
+    def ensure_bundle(self, params, batch) -> StepBundle:
+        """Build (or return) the compiled split-step bundle.
+
+        AOT path: one ``jit.lower(...).compile()`` yields both the
+        executable and the optimized HLO text, so cost attribution never
+        costs a second compile."""
+        if self.bundle is None:
+            grad_fn, opt_fn = make_split_train_step(self.model, self.opt)
+            compiled = jax.jit(grad_fn).lower(params, batch).compile()
+            gemm_frac = None
+            try:
+                from repro.launch.hlo_cost import expanded_cost
+                cost = expanded_cost(compiled.as_text(), num_devices=1)
+                t_gemm = cost.flops / _ROOFLINE_FLOPS_S
+                t_other = cost.bytes / _ROOFLINE_BYTES_S
+                if t_gemm + t_other > 0.0:
+                    gemm_frac = min(0.95, max(0.05,
+                                              t_gemm / (t_gemm + t_other)))
+            except Exception:
+                gemm_frac = None          # attribution is best-effort
+            self.bundle = StepBundle(
+                grad_step=compiled,
+                opt_step=jax.jit(opt_fn, donate_argnums=(0, 1, 2)),
+                gemm_frac=gemm_frac)
+        return self.bundle
+
+    def train_iteration(self, params, opt_state, tracer=None):
+        """One fully-instrumented iteration of the REAL loop.
+
+        Identical math to ``run()``'s fused step, but split so every phase
+        is a genuine host-visible span: ``dataloader.next`` (PYTHON),
+        ``train.step`` (fwd+bwd, fenced on the grads, split into
+        ``xla.gemm``/``xla.other`` depth-2 sub-events by the HLO cost
+        model), ``optimizer.step`` (fenced on the new params), and
+        ``ckpt.save`` when a checkpoint interval hits.  ``tracer`` may be
+        None or inactive — the loop then runs unobserved (the overhead
+        benchmark's baseline).  Returns ``(params, opt_state, metrics)``.
+        """
+        ph = tracer.phase if tracer is not None else _noop_phase
+        with ph("dataloader.next", Kind.PYTHON):
+            batch_np = self.loader.next()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if self.data_burn_s > 0.0:    # injected fault: CPU-burning loader
+                deadline = time.perf_counter() + self.data_burn_s
+                x = 1.0
+                while time.perf_counter() < deadline:
+                    x = x * 1.0000001 + 1.0
+        bundle = self.ensure_bundle(params, batch)
+        res = self._step_resource
+        t0 = time.perf_counter()
+        grads, metrics = bundle.grad_step(params, batch)
+        if self.step_pad_s > 0.0:         # injected fault: slow device step
+            time.sleep(self.step_pad_s)
+        jax.block_until_ready(grads)
+        t1 = time.perf_counter()
+        if tracer is not None and tracer.active:
+            tracer.add_event("train.step", Kind.GPU, t0, t1, depth=1,
+                             resource=res)
+            if bundle.gemm_frac is not None:
+                cut = t0 + (t1 - t0) * bundle.gemm_frac
+                tracer.add_event("xla.gemm", Kind.GPU, t0, cut, depth=2,
+                                 resource=res)
+                tracer.add_event("xla.other", Kind.GPU, cut, t1, depth=2,
+                                 resource=res)
+        with ph("optimizer.step", Kind.GPU, resource=res,
+                fence=lambda: new_params):
+            new_params, new_opt, opt_metrics = bundle.opt_step(
+                grads, opt_state, params)
+        self._iter += 1
+        if self.ckpt and self.tc.ckpt_every \
+                and self._iter % self.tc.ckpt_every == 0:
+            with ph("ckpt.save", Kind.PYTHON):
+                self.ckpt.save(self._iter, {"params": new_params,
+                                            "opt": new_opt})
+        if self.gc_pause_s > 0.0 and self._iter % max(1, self.gc_every) == 0:
+            # injected fault: unsynchronized gc stall (C2P3 stand-in)
+            with ph("runtime.gc", Kind.PYTHON):
+                gc.collect()
+                time.sleep(self.gc_pause_s)
+        m = dict(metrics)
+        m.update(opt_metrics)
+        return new_params, new_opt, m
 
     # ------------------------------------------------------------------
     def run(self, steps: Optional[int] = None):

@@ -48,6 +48,29 @@ def make_train_step(model: Transformer, opt: AdamW, accum_steps: int = 1):
     return train_step
 
 
+def make_split_train_step(model: Transformer, opt: AdamW):
+    """Two separately-jittable halves of the fused step — (grad, opt) — for
+    instrumented loops that want a real host-visible fence between the
+    fwd+bwd dispatch and the optimizer update (``train.step`` vs
+    ``optimizer.step`` phases).  Numerically identical to
+    ``make_train_step(accum_steps=1)``; slightly slower (two dispatches,
+    grads round-trip through HBM)."""
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def grad_step(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def opt_step(grads, opt_state, params):
+        new_params, new_state, opt_metrics = opt.update(
+            grads, opt_state, params)
+        return new_params, new_state, opt_metrics
+
+    return grad_step, opt_step
+
+
 def make_prefill_step(model: Transformer):
     def prefill_step(params, batch):
         hidden, _, cache = model.forward(params, batch, collect_cache=True)

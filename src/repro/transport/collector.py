@@ -39,6 +39,9 @@ class WindowBatch:
     window: int
     expected: Tuple[int, ...]                 # worker ids owed this window
     uploads: Dict[int, "PatternUpload"] = field(default_factory=dict)
+    #: per-worker measured iteration durations (REAL workloads only; empty
+    #: for simulator runs, whose parents own the anchor stream)
+    anchors: Dict[int, List[float]] = field(default_factory=dict)
     ended: Set[int] = field(default_factory=set)
     duplicates: int = 0                       # deduped (window, worker) copies
     client_dropped: int = 0                   # cumulative backpressure drops
@@ -82,6 +85,10 @@ class WindowBatch:
 class WindowCollector:
     """Thread-safe (window, worker) -> upload reassembly."""
 
+    #: frame types the DaemonServer forwards here (anchors frames carry a
+    #: real workload's iteration durations, DESIGN.md §11)
+    HANDLED = ("upload", "window_end", "anchors")
+
     def __init__(self, expected_workers: Sequence[int]):
         self.expected = tuple(sorted(int(w) for w in expected_workers))
         self._batches: Dict[int, WindowBatch] = {}
@@ -124,6 +131,16 @@ class WindowCollector:
                 else:
                     b.uploads[upload.worker] = upload
                     self.total_uploads += 1
+        elif t == "anchors":
+            with self._cv:
+                if int(msg["window"]) <= self._popped_through:
+                    self.stale_frames += 1
+                    return
+                b = self._batch(int(msg["window"]))
+                # first copy wins, like uploads (the frame is undroppable,
+                # so a duplicate is a retransmit after reconnect)
+                b.anchors.setdefault(int(msg["worker"]),
+                                     [float(d) for d in msg.get("durs", [])])
         elif t == "window_end":
             with self._cv:
                 if int(msg["window"]) <= self._popped_through:

@@ -21,6 +21,10 @@ Every frame body is a msgpack map with a ``"t"`` type tag:
                    backpressure drop count and ``reconnects`` the number
                    of times the client re-dialed the collector — loss
                    accounting rides on this frame, which is never dropped)
+  ``anchors``      client -> server   {window, worker, durs}
+                   (a REAL workload's measured per-iteration durations for
+                   the window — the parent merges them into the job-level
+                   detector stream; control grade, never dropped)
   ``shard``        leaf -> root       one COMPACTED rack window: packed
                    columnar patterns (float32 rows), present workers,
                    missing/dup/drop counters (DESIGN.md §10)
@@ -172,6 +176,15 @@ def window_end_msg(window: int, worker: int, sent: int, dropped: int,
     return {"t": "window_end", "window": int(window), "worker": int(worker),
             "sent": int(sent), "dropped": int(dropped),
             "reconnects": int(reconnects)}
+
+
+def anchors_msg(window: int, worker: int, durations: Sequence[float]) -> Dict:
+    """Per-window anchor report of a REAL workload (DESIGN.md §11): the
+    worker's measured iteration durations, in iteration order.  Control
+    grade — sent undroppable, because the job-level iteration detector's
+    (D, O) stream is merged from these."""
+    return {"t": "anchors", "window": int(window), "worker": int(worker),
+            "durs": [float(d) for d in durations]}
 
 
 def window_start_msg(window: int, rates=None, stop: bool = False,

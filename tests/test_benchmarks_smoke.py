@@ -30,6 +30,9 @@ SHRINK = {
     "REPRO_BENCH_TREE_W": "12",
     "REPRO_BENCH_TREE_SHARDS": "3",
     "REPRO_BENCH_TREE_WINDOWS": "2",
+    "REPRO_BENCH_TRAIN_OVERHEAD_ITERS": "4",
+    "REPRO_TRAIN_D_MODEL": "32",          # layers stay 2 (gemma2 pairs)
+    "REPRO_TRAIN_VOCAB": "256",
 }
 
 
