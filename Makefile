@@ -2,7 +2,7 @@ PY ?= python
 
 .PHONY: test test-wire test-train test-cov deps lint bench bench-summarize \
         bench-fleet bench-online bench-wire bench-mitigation bench-tree \
-        bench-overhead bench-gate bench-gate-update
+        bench-overhead bench-scenarios bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -64,10 +64,17 @@ bench-tree:
 bench-overhead:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only train_overhead
 
-# the CI benchmark-regression gate: run the six gated benchmarks with the
+# the full gated fault-scenario matrix (ISSUE 8, DESIGN.md §12): runs
+# every catalog scenario through the closed loop, prints + writes the
+# per-scenario markdown table (reports/scenario-matrix.md), exits
+# non-zero when any scenario misses its declared expectations
+bench-scenarios:
+	PYTHONPATH=src:. $(PY) benchmarks/scenario_table.py
+
+# the CI benchmark-regression gate: run the gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,collector_tree,train_overhead
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,collector_tree,train_overhead,ability_matrix
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

@@ -1,14 +1,34 @@
 """Table 4: troubleshooting-ability matrix — PerfTracker vs the
 state-of-the-art baselines, all IMPLEMENTED and run on the same simulated
-faults (C1P1, C1P2, C2P1, C2P2, C2P3 + the §3 ring case).
+faults (C1P1, C1P2, C2P1, C2P2, C2P3 + the §3 ring case) — plus the full
+gated fault-scenario catalog (ISSUE 8, DESIGN.md §12): every declared
+scenario runs the closed act->verify->escalate loop end-to-end and its
+outcome is scored against the catalog's expectations.
 
 Baselines (per the paper's descriptions):
   * hw-monitor (Minder/DCGM-class): per-worker coarse hardware means only
     (1 Hz), cross-worker z-score outlier rule; no function attribution.
   * comm-monitor (C4/MegaScale-class): collective-transport stats only.
+
+Env knobs (CI smoke shrink, see tests/test_benchmarks_smoke.py):
+  * ``REPRO_BENCH_ABILITY_CASES``      — comma-separated one-shot cases;
+  * ``REPRO_BENCH_ABILITY_SCENARIOS``  — comma-separated catalog scenario
+    names (default: the whole catalog).
+
+Row families for the regression gate (benchmarks/baselines.json):
+  * ``ability/<case>``            — one-shot detection vs baselines;
+  * ``ability/scenario_<name>``   — value = mean windows-to-resolution
+    over the scenario's resolved expectations (-1 when none resolve,
+    e.g. the bad-standby family), derived carries
+    class/resolved/escalated/first_action/ok;
+  * ``ability/class_<class>``     — value = mean windows-to-resolution
+    over the class's resolved expectations (the gated per-class ceiling);
+  * ``ability/matrix``            — value = scenarios run, ``ok`` = the
+    whole matrix met its declared expectations.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List
 
@@ -71,10 +91,71 @@ def perftracker(profiles, expect) -> bool:
     return any(expect in f for f in res.functions())
 
 
+def _selected(env: str, names):
+    sel = os.environ.get(env, "")
+    if not sel:
+        return None if names is None else list(names)
+    return [s.strip() for s in sel.split(",") if s.strip()]
+
+
+def _yn(flag: bool) -> str:
+    return "Y" if flag else "N"
+
+
+def scenario_rows(scenario_names=None) -> List[tuple]:
+    """Run the catalog matrix; one row per scenario + per-class and
+    aggregate rollups (see module docstring for the row contract)."""
+    from repro.online.catalog import (FAULT_CLASSES, by_name, evaluate,
+                                      run_scenario)
+    names = (_selected("REPRO_BENCH_ABILITY_SCENARIOS", None)
+             if scenario_names is None else list(scenario_names))
+    if names is None:
+        from repro.online.catalog import SCENARIOS
+        scenarios = list(SCENARIOS)
+    else:
+        scenarios = [by_name(n) for n in names]
+
+    rows: List[tuple] = []
+    cls_wtr: Dict[str, List[int]] = {}
+    cls_ok: Dict[str, bool] = {}
+    cls_n: Dict[str, int] = {}
+    all_ok = True
+    for sc in scenarios:
+        runner, res = run_scenario(sc)
+        ev = evaluate(sc, runner, res)
+        ok = all(r["ok"] for r in ev)
+        all_ok &= ok
+        wtrs = [r["wtr"] for r in ev if r["wtr"] is not None]
+        resolved = all(r["resolved"] for r in ev)
+        escalated = any(r["escalated"] for r in ev)
+        first = "+".join(r["first_action"] or "none" for r in ev)
+        value = float(np.mean(wtrs)) if wtrs else -1.0
+        rows.append((
+            f"ability/scenario_{sc.name}", value,
+            f"class={sc.fault_class};resolved={_yn(resolved)};"
+            f"escalated={_yn(escalated)};first_action={first};"
+            f"ok={_yn(ok)}"))
+        cls_wtr.setdefault(sc.fault_class, []).extend(wtrs)
+        cls_ok[sc.fault_class] = cls_ok.get(sc.fault_class, True) and ok
+        cls_n[sc.fault_class] = cls_n.get(sc.fault_class, 0) + 1
+    for cls in FAULT_CLASSES:
+        if cls not in cls_n:
+            continue
+        wtrs = cls_wtr.get(cls, [])
+        rows.append((
+            f"ability/class_{cls}",
+            float(np.mean(wtrs)) if wtrs else -1.0,
+            f"ok={_yn(cls_ok[cls])};scenarios={cls_n[cls]}"))
+    rows.append(("ability/matrix", float(len(scenarios)),
+                 f"ok={_yn(all_ok)};scenarios={len(scenarios)}"))
+    return rows
+
+
 def run():
     rows = []
     matrix: Dict[str, List[str]] = {}
-    for case, (faults, expect) in CASES.items():
+    for case in _selected("REPRO_BENCH_ABILITY_CASES", CASES):
+        faults, expect = CASES[case]
         sim = FleetSimulator(SimConfig(n_workers=32, window_s=2.0,
                                        rate_hz=2000, seed=7), faults)
         profiles = sim.profile_window()
@@ -87,7 +168,7 @@ def run():
                      f"perftracker={'Y' if pt else 'N'};"
                      f"hw_monitor={'Y' if hw else 'N'};"
                      f"comm_monitor={'Y' if cm else 'N'}"))
-    return rows
+    return rows + scenario_rows()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+"""ISSUE 8: run the full gated fault-scenario catalog and render the
+per-scenario markdown table the CI ``scenario-matrix`` job publishes
+(job summary + ``reports/scenario-matrix.md`` artifact).
+
+Exit status is the gate: non-zero when any scenario misses its declared
+expectations.  ``REPRO_BENCH_ABILITY_SCENARIOS`` shrinks the run (CI
+smoke / local debugging), same knob as benchmarks/ability_matrix.py.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+from repro.online.catalog import SCENARIOS, by_name, evaluate, run_scenario
+
+OUT = Path(os.environ.get("REPRO_SCENARIO_TABLE",
+                          "reports/scenario-matrix.md"))
+
+HEADER = ("| scenario | class | function | channel | outcome | first plan "
+          "| escalations | wtr | ok |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def _outcome(row) -> str:
+    if row["resolved"]:
+        return "resolved"
+    if row["escalated"]:
+        return "escalated"
+    return "MISSING"
+
+
+def main() -> int:
+    sel = os.environ.get("REPRO_BENCH_ABILITY_SCENARIOS", "")
+    scenarios = ([by_name(s.strip()) for s in sel.split(",") if s.strip()]
+                 if sel else list(SCENARIOS))
+    lines = ["### Fault-scenario matrix (DESIGN.md §12)", "", HEADER]
+    n_rows = n_ok = 0
+    for sc in scenarios:
+        runner, res = run_scenario(sc)
+        for row in evaluate(sc, runner, res):
+            n_rows += 1
+            n_ok += bool(row["ok"])
+            wtr = row["wtr"] if row["wtr"] is not None else "—"
+            lines.append(
+                f"| {row['scenario']} | {row['fault_class']} "
+                f"| `{row['function']}` | {row['channel']} "
+                f"| {_outcome(row)} | {row['first_action'] or '—'} "
+                f"| {row['escalations']} | {wtr} "
+                f"| {'✅' if row['ok'] else '❌'} |")
+    ok = n_ok == n_rows
+    lines += ["", f"**{n_ok}/{n_rows} expectations met across "
+                  f"{len(scenarios)} scenarios — "
+                  f"{'PASS' if ok else 'FAIL'}**", ""]
+    text = "\n".join(lines)
+    print(text)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(text)
+    print(f"wrote {OUT}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

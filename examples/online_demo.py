@@ -8,6 +8,8 @@ implicated workers escalate to the full 2 kHz.
 Run:  PYTHONPATH=src python examples/online_demo.py
       PYTHONPATH=src python examples/online_demo.py --wire [--loss 0.1]
       PYTHONPATH=src python examples/online_demo.py --mitigate
+      PYTHONPATH=src python examples/online_demo.py --scenario E3_bad_standby_driver
+      PYTHONPATH=src python examples/online_demo.py --list-scenarios
 
 ``--wire`` runs the SAME scenario across real process boundaries: 4
 spawned worker processes each run per-worker daemons over their slice of
@@ -20,6 +22,12 @@ the faults — instead the MitigationEngine executes each incident's ladder
 against the simulator (throttled hosts are replaced by standbys via an
 elastic re-mesh, the dataloader migrates), verification watches the
 signature clear, and every incident is driven to ``resolved``.
+
+``--scenario <name>`` runs ONE entry of the gated fault-scenario catalog
+(DESIGN.md §12) with the mitigation loop closed and scores the outcome
+against its declared expectations — try ``E3_bad_standby_driver`` to
+watch ``replace_hosts`` land on a poisoned standby and the incident
+escalate honestly.  ``--list-scenarios`` prints the catalog.
 """
 import argparse
 
@@ -72,15 +80,38 @@ def main() -> None:
     ap.add_argument("--mitigate", action="store_true",
                     help="execute mitigation plans against the simulator "
                          "and verify recovery (DESIGN.md §9)")
+    ap.add_argument("--scenario", default="",
+                    help="run one catalog scenario (DESIGN.md §12) with "
+                         "mitigation closed and score it against its "
+                         "declared expectations")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the fault-scenario catalog and exit")
     args = ap.parse_args()
     if args.wire and args.mitigate:
         ap.error("--mitigate is in-process only (cures cannot yet be "
                  "broadcast to spawned daemons)")
+    if args.scenario and args.wire:
+        ap.error("--scenario is in-process only")
 
-    runner, schedule = make_runner(mitigate=args.mitigate)
-    if args.wire:
+    if args.list_scenarios:
+        from repro.online import SCENARIOS
+        for sc in SCENARIOS:
+            expect = ", ".join(
+                f"{e.function.split('/')[-1]}[{e.outcome}]"
+                for e in sc.expect)
+            print(f"{sc.name:28s} {sc.fault_class:12s} -> {expect}")
+        return
+
+    if args.scenario:
+        from repro.online import evaluate, run_scenario
+        from repro.online.catalog import by_name
+        sc = by_name(args.scenario)
+        runner, result = run_scenario(sc)
+    elif args.wire:
+        runner, schedule = make_runner(mitigate=args.mitigate)
         result = runner.run_multiprocess(n_procs=4, loss=args.loss)
     else:
+        runner, schedule = make_runner(mitigate=args.mitigate)
         result = runner.run()
 
     print("=== per-window reports " + "=" * 40)
@@ -104,11 +135,21 @@ def main() -> None:
     print("\n=== incident timeline " + "=" * 41)
     print(result.timeline())
 
-    if args.mitigate:
+    if args.mitigate or args.scenario:
         print("\n=== fleet after mitigation " + "=" * 36)
         active = runner.sim.active_workers
         print(f"active workers ({len(active)}): {active}")
         print(f"standbys left: {runner.sim.standbys}")
+
+    if args.scenario:
+        print("\n=== scorecard " + "=" * 49)
+        for row in evaluate(sc, runner, result):
+            outcome = ("resolved" if row["resolved"]
+                       else "escalated" if row["escalated"] else "MISSING")
+            print(f"{'OK ' if row['ok'] else 'FAIL'} "
+                  f"{row['function'][:40]:40s} ch={row['channel']:8s} "
+                  f"{outcome:9s} first={row['first_action']} "
+                  f"escalations={row['escalations']} wtr={row['wtr']}")
 
     print("\n=== cost " + "=" * 54)
     total = sum(r.raw_bytes for r in result.reports)

@@ -25,11 +25,13 @@ OPTIMIZER_STEP = "optimizer.step"
 
 @dataclass(frozen=True)
 class Trigger:
-    reason: str               # 'slowdown' | 'blockage'
+    reason: str               # 'slowdown' | 'blockage' | numerics reasons
     time: float
-    mean_duration: float
+    mean_duration: float      # numerics channel: the offending sample value
     baseline: float
     detail: str = ""
+    channel: str = "perf"     # 'perf' | 'numerics' — which detector stream
+    #                           fired; incidents keep the channels apart
 
 
 @dataclass(frozen=True)
@@ -38,8 +40,9 @@ class Recovery:
     slowdown re-arm fires (recent mean back under threshold) or a blockage
     stall ends (anchor events flow again).  This is the signal the online
     incident pipeline resolves incidents on (DESIGN.md §7)."""
-    reason: str               # 'slowdown' | 'blockage'
+    reason: str               # 'slowdown' | 'blockage' | numerics reasons
     time: float
+    channel: str = "perf"
 
 
 @dataclass
@@ -217,3 +220,118 @@ class IterationDetector:
         """True when no triggered degradation is outstanding: every fired
         trigger's re-arm condition has recovered (or nothing ever fired)."""
         return self._slowdown_armed and self._blockage_armed
+
+
+# -- numerics channel (DESIGN.md §12a) ----------------------------------------
+
+@dataclass
+class NumericsConfig:
+    warmup: int = 8           # healthy samples before a baseline exists
+    history: int = 256        # rolling healthy-sample window per signal
+    spike_ratio: float = 2.0  # loss > ratio x median(healthy) = abnormal
+    grad_ratio: float = 3.0   # grad_norm ratio (norms jitter more)
+    confirm: int = 2          # consecutive abnormal samples to trigger
+    recover: int = 2          # consecutive healthy samples to recover
+
+
+#: numerics signals in feed order; also the function-name suffixes the
+#: pipeline uses when it synthesizes numerics abnormalities
+NUMERICS_SIGNALS = ("loss", "grad_norm")
+
+_NUMERICS_REASON = {"loss": "loss_spike", "grad_norm": "grad_explosion"}
+
+
+class NumericsDetector:
+    """FLARE-style divergence channel: job-level (loss, grad_norm) samples
+    against a rolling healthy-median baseline, one state machine per
+    signal.
+
+    Mirrors ``IterationDetector``'s contract — ``feed`` returns Triggers,
+    ``recoveries`` accumulates, ``healthy`` says nothing is outstanding —
+    so the incident pipeline treats both channels identically; Triggers
+    and Recoveries carry ``channel='numerics'``.
+
+    Robustness rules:
+      * abnormal samples (and non-finite ones) NEVER fold into the
+        baseline — a spike must not poison the median it is judged by;
+      * a single abnormal sample recovers silently (``confirm=2``): loss
+        routinely jumps for one step on a hard batch;
+      * a NON-FINITE sample skips confirmation and fires immediately —
+        there is no benign single-sample NaN.
+    """
+
+    def __init__(self, cfg: Optional[NumericsConfig] = None):
+        self.cfg = cfg if cfg is not None else NumericsConfig()
+        self._hist = {s: deque(maxlen=self.cfg.history)
+                      for s in NUMERICS_SIGNALS}
+        self._bad_streak = {s: 0 for s in NUMERICS_SIGNALS}
+        self._ok_streak = {s: 0 for s in NUMERICS_SIGNALS}
+        self._outstanding = {s: False for s in NUMERICS_SIGNALS}
+        self.triggers: List[Trigger] = []
+        self.recoveries: List[Recovery] = []
+
+    def _ratio(self, signal: str) -> float:
+        return (self.cfg.spike_ratio if signal == "loss"
+                else self.cfg.grad_ratio)
+
+    def _feed_signal(self, signal: str, t: float, value: float
+                     ) -> Optional[Trigger]:
+        cfg = self.cfg
+        hist = self._hist[signal]
+        reason = _NUMERICS_REASON[signal]
+        finite = value == value and abs(value) != float("inf")
+        baseline = (sorted(hist)[len(hist) // 2]) if hist else 0.0
+        if not finite:
+            abnormal = True
+        elif len(hist) < cfg.warmup:
+            hist.append(value)
+            return None
+        else:
+            abnormal = value > baseline * self._ratio(signal)
+
+        if not abnormal:
+            hist.append(value)
+            self._bad_streak[signal] = 0
+            if self._outstanding[signal]:
+                self._ok_streak[signal] += 1
+                if self._ok_streak[signal] >= cfg.recover:
+                    self._outstanding[signal] = False
+                    self._ok_streak[signal] = 0
+                    self.recoveries.append(
+                        Recovery(reason, t, channel="numerics"))
+            return None
+
+        self._ok_streak[signal] = 0
+        self._bad_streak[signal] += 1
+        if self._outstanding[signal]:
+            return None               # already fired; silent until recovery
+        if finite and self._bad_streak[signal] < cfg.confirm:
+            return None               # single spike: wait for confirmation
+        self._outstanding[signal] = True
+        trig = Trigger(
+            reason, t, value, baseline,
+            (f"{signal}={value!r} vs healthy median {baseline:.4g} "
+             f"(x{self._ratio(signal):.1f} bound"
+             + (", non-finite)" if not finite else ")")),
+            channel="numerics")
+        self.triggers.append(trig)
+        return trig
+
+    def feed(self, t: float, loss: float, grad_norm: float
+             ) -> List[Trigger]:
+        """Feed one training step's (loss, grad_norm); returns any
+        triggers that fired (one per signal at most)."""
+        out = []
+        for signal, value in zip(NUMERICS_SIGNALS, (loss, grad_norm)):
+            trig = self._feed_signal(signal, t, float(value))
+            if trig is not None:
+                out.append(trig)
+        return out
+
+    def outstanding(self) -> List[str]:
+        """Signals with a fired, not-yet-recovered trigger."""
+        return [s for s in NUMERICS_SIGNALS if self._outstanding[s]]
+
+    @property
+    def healthy(self) -> bool:
+        return not any(self._outstanding.values())

@@ -21,6 +21,10 @@ class Kind(IntEnum):
     MEM = 1        # memory operations (malloc/memcpy/H2D/D2H)
     COMM = 2       # collective communication kernels
     PYTHON = 3     # Python functions (training thread, leaf frames)
+    NUMERICS = 4   # job-level numerics signals (loss / grad-norm channel,
+    #                DESIGN.md §12a) — never appears in worker profiles;
+    #                exists so numerics abnormalities ride the same
+    #                report/mitigation path as perf kinds
 
 
 #: resource stream that determines performance per kind (paper §4.2)
@@ -29,6 +33,7 @@ RESOURCE_FOR_KIND = {
     Kind.MEM: "membw",
     Kind.COMM: "pcie_tx",     # GPU->NIC for inter-host collectives
     Kind.PYTHON: "cpu",
+    Kind.NUMERICS: "cpu",     # defensive: numerics events are synthetic
 }
 
 

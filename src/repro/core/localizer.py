@@ -38,6 +38,10 @@ class Abnormality:
     patterns: np.ndarray          # (n_abnormal, 3)
     typical: np.ndarray           # median pattern across fleet (3,)
     reason: str = ""              # 'expectation' | 'differential' | both
+    channel: str = "perf"         # detector channel ('perf' | 'numerics')
+    #                               — numerics abnormalities are synthesized
+    #                               from the numerics detector stream, not
+    #                               from profile patterns (DESIGN.md §12a)
 
 
 class Localizer:

@@ -32,6 +32,7 @@ from repro.core.report import Diagnosis
 class Action(Enum):
     REPLACE_HOSTS = "replace_hosts"          # checkpoint-now + re-mesh
     CHECKPOINT_NOW = "checkpoint_now"
+    ROLLBACK_TO_CHECKPOINT = "rollback_to_checkpoint"   # numerics: restore
     MIGRATE_DATALOADER = "migrate_dataloader"
     SYNCHRONIZE_GC = "synchronize_gc"
     FLAG_CODE = "flag_code_for_optimization"
@@ -55,6 +56,22 @@ def plan_ladder(d: Diagnosis, fleet_size: int) -> List[MitigationPlan]:
     a = d.abnormality
     frac = len(a.workers) / max(1, fleet_size)
     ws = sorted(int(w) for w in a.workers)
+
+    if a.kind == Kind.NUMERICS:
+        # loss spike / gradient-norm explosion: the model state is suspect,
+        # not the hardware — restore the last good checkpoint (skipping the
+        # poisoned batch), and when divergence recurs flag the code
+        # (lr schedule / data) for a human
+        return [
+            MitigationPlan(
+                Action.ROLLBACK_TO_CHECKPOINT, [],
+                f"numerics anomaly in {a.function}: restore last good "
+                "checkpoint and skip the offending data shard"),
+            MitigationPlan(
+                Action.FLAG_CODE, [],
+                "divergence survived rollback -> flag lr schedule / data "
+                "pipeline for investigation"),
+        ]
 
     if a.kind in (Kind.GPU, Kind.COMM):
         if frac >= 0.5:
@@ -84,6 +101,21 @@ def plan_ladder(d: Diagnosis, fleet_size: int) -> List[MitigationPlan]:
 
     if a.kind == Kind.PYTHON:
         if "socket" in a.function or "dataloader" in a.function:
+            if ("thrash" in d.hint or "page-cache" in d.hint) \
+                    and ws and frac < 0.5:
+                # IO contention localized to a few hosts: their page cache
+                # (or local disk) is sick, not the shared storage — replace
+                # them before reaching for a storage migration
+                return [
+                    MitigationPlan(
+                        Action.REPLACE_HOSTS, ws,
+                        "page-cache thrash pinned to these hosts: replace "
+                        "them (local IO path is sick)"),
+                    MitigationPlan(
+                        Action.MIGRATE_DATALOADER, [],
+                        "thrash survived host replacement -> move input "
+                        "data to the parallel file system"),
+                ]
             return [
                 MitigationPlan(
                     Action.MIGRATE_DATALOADER, [],
@@ -92,6 +124,19 @@ def plan_ladder(d: Diagnosis, fleet_size: int) -> List[MitigationPlan]:
                     Action.FLAG_CODE, ws,
                     "storage migration did not clear it -> optimize the "
                     "input pipeline itself"),
+            ]
+        if "cgroup" in d.hint and ws and frac < 0.5:
+            # OS-level CPU quota on specific hosts: no code change fixes a
+            # misconfigured cgroup — replace (or re-image) the hosts
+            return [
+                MitigationPlan(
+                    Action.REPLACE_HOSTS, ws,
+                    "cgroup CPU quota throttling these hosts: replace "
+                    "them and flag the node config"),
+                MitigationPlan(
+                    Action.FLAG_CODE, ws,
+                    "persists on fresh hosts -> suspect the training "
+                    f"code; optimize {a.function}"),
             ]
         if "gc" in d.hint or "garbage" in d.hint:
             return [

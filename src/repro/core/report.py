@@ -34,16 +34,32 @@ def root_cause_hint(a: Abnormality, fleet_size: int) -> str:
     sigma = float(np.median(a.patterns[:, 2]))
     t_beta, t_mu, t_sigma = (float(x) for x in a.typical)
 
+    if a.kind == Kind.NUMERICS:
+        if "grad" in a.function:
+            return ("gradient-norm explosion on the numerics channel -> "
+                    "model state is suspect; roll back to the last good "
+                    "checkpoint and skip the offending batch")
+        return ("training-loss spike on the numerics channel -> model "
+                "state is suspect; roll back to the last good checkpoint "
+                "and skip the offending batch")
     if a.kind == Kind.GPU:
-        if beta > t_beta and mu < t_mu * 0.75:
+        if beta > t_beta and mu < t_mu * 0.45:
             return ("slow GPU computation at low SM/frequency utilization "
                     "-> suspect GPU throttling / degraded GPUs (case C1P1)")
+        if beta > t_beta and mu < t_mu * 0.75:
+            return ("slow GPU computation at MODERATE SM utilization -> "
+                    "suspect driver/kernel version mismatch on these hosts "
+                    "(mis-tuned stack, not a throttled clock)")
         return "GPU kernels slower than peers"
     if a.kind == Kind.COMM:
         mu_max = float(np.max(a.patterns[:, 1]))
         if mu > t_mu * 1.5 or (mu_max > t_mu * 1.5 and mu_max > 0.7):
             return ("collective traffic at unusually HIGH PCIe utilization "
                     "-> NVLink down, traffic falling back to PCIe (C1P2)")
+        if mu < t_mu * 0.5 and frac < 0.2 and sigma < t_sigma:
+            return ("collectives collapsed to low, stable link utilization "
+                    "on these hosts while the fleet is healthy -> degraded "
+                    "NIC; replace the hosts")
         if sigma < t_sigma * 0.5 and frac < 0.2:
             return ("stable throughput while peers fluctuate -> this worker "
                     "drives the degraded link (ring slow-link, §3 Fig. 5c)")
@@ -56,6 +72,10 @@ def root_cause_hint(a: Abnormality, fleet_size: int) -> str:
         return "collective communication slower than peers"
     if a.kind == Kind.PYTHON:
         if "socket" in a.function or "dataloader" in a.function:
+            if mu < 0.3 and sigma > t_sigma * 1.5 and 0.0 < frac < 0.5:
+                return ("long, bursty, non-CPU-intensive dataloader frames "
+                        "on a few hosts -> page-cache thrash / local IO "
+                        "contention; replace the hosts")
             if frac > 0.5:
                 return ("dataloader socket recv dominates on most workers "
                         "-> slow storage / data loading (C2P1)")
@@ -67,6 +87,11 @@ def root_cause_hint(a: Abnormality, fleet_size: int) -> str:
             return ("long non-CPU-intensive Python frames scattered over "
                     "random workers -> asynchronous garbage collection; "
                     "synchronize gc across workers (C2P3)")
+        if sigma < max(0.01, t_sigma * 0.5) and 0.25 <= mu <= 0.6 \
+                and 0.0 < frac < 0.5:
+            return ("Python frames stretched with CPU utilization CLAMPED "
+                    "FLAT at a ceiling on these hosts -> cgroup CPU quota "
+                    "throttling; replace or re-image the hosts")
         return "Python function exceeds the 1% critical-path budget"
     if a.kind == Kind.MEM:
         return "memory operations dominate -> host/device copy bottleneck"

@@ -118,6 +118,16 @@ class FleetSimulator:
             elif isinstance(f, F.AsyncGc):
                 m = max(m, 1 + f.probability * f.pause_s
                         / self.cfg.iteration_s)
+            elif isinstance(f, F.CgroupCpuThrottle):
+                m = max(m, 1 + 0.012 * f.slowdown)
+            elif isinstance(f, F.PageCacheThrash):
+                m = max(m, 1 + 0.005 * f.slowdown)
+            elif isinstance(f, F.DriverMismatch):
+                m = max(m, 1 + 0.45 * (f.slowdown - 1))
+            elif isinstance(f, F.DegradedNic):
+                m = max(m, 1 + 0.35 * (1 / f.rho - 1))
+            # numerics faults (LossSpike / GradExplosion) are deliberately
+            # absent: they never slow an iteration (DESIGN.md §12a)
         return m
 
     # -- anchor event stream (feeds the §4.1 detector) --------------------
@@ -242,6 +252,17 @@ class FleetSimulator:
         cpufwd = next((f for f in self._fault(F.CpuBoundForward)
                        if not f.workers or w in f.workers), None)
         gc = self._fault(F.AsyncGc)
+        cgroup = next((f for f in self._fault(F.CgroupCpuThrottle)
+                       if w in f.workers), None)
+        thrash = next((f for f in self._fault(F.PageCacheThrash)
+                       if not f.workers or w in f.workers), None)
+        driver = next((f for f in self._fault(F.DriverMismatch)
+                       if w in f.workers), None)
+        # a degraded NIC manifests on the bad host itself (its recv stalls);
+        # DP-group peers wait at the NEXT barrier, which is job-level
+        # (iteration_multiplier) rather than a profile signature
+        degnic = next((f for f in self._fault(F.DegradedNic)
+                       if w in f.workers), None)
 
         def paint(stream: str, t0: float, t1: float, level: float,
                   jitter: float = 0.03):
@@ -255,24 +276,45 @@ class FleetSimulator:
         iter_s = cfg.iteration_s
         while t < cfg.window_s:
             # 1) dataloader
-            d = 0.005 * iter_s * (dl[0].slowdown if dl else 1.0)
+            dl_mult = (dl[0].slowdown if dl
+                       else (thrash.slowdown if thrash else 1.0))
+            d = 0.005 * iter_s * dl_mult
             events.append(FunctionEvent(DATALOADER_STACK, Kind.PYTHON,
                                         t, t + d, w, depth=3))
-            paint("cpu", t, t + d, 0.35 if dl else 0.5)
+            if thrash:
+                # page-cache thrash: long reads spent WAITING on disk —
+                # low CPU, bursty (DESIGN.md §12b)
+                paint("cpu", t, t + d, 0.15, jitter=0.18)
+            else:
+                paint("cpu", t, t + d, 0.35 if dl else 0.5)
             t += d
             # 2) forward: python wrapper + GEMMs (+ h2d)
             fwd_mult = (cpufwd.slowdown if cpufwd else 1.0)
+            if cgroup:
+                fwd_mult *= cgroup.slowdown
             fwd_py = 0.004 * iter_s * fwd_mult
             events.append(FunctionEvent(FORWARD_STACK, Kind.PYTHON,
                                         t, t + fwd_py, w, depth=2))
-            paint("cpu", t, t + fwd_py, 0.9 if cpufwd else 0.4)
+            if cgroup:
+                # cgroup quota: utilization CLAMPED FLAT at the ceiling —
+                # the scheduler enforces it exactly (near-zero jitter)
+                paint("cpu", t, t + fwd_py, cgroup.quota, jitter=0.005)
+            else:
+                paint("cpu", t, t + fwd_py, 0.9 if cpufwd else 0.4)
             t += fwd_py
+            gpu_slow = (throttle.slowdown if throttle
+                        else (driver.slowdown if driver else 1.0))
+            gpu_util = (throttle.util if throttle
+                        else (driver.util if driver else 0.92))
+            # driver/kernel mismatch: the mis-tuned stack picks varying
+            # kernels, so SM utilization is ERRATIC (high sigma) at a
+            # moderate mean — vs a throttled clock's stable low mean
+            gpu_jit = 0.10 if (driver and not throttle) else 0.03
             g = 0.33 * iter_s / cfg.n_fwd_gemms
             for _ in range(cfg.n_fwd_gemms):
-                gd = g * (throttle.slowdown if throttle else 1.0)
+                gd = g * gpu_slow
                 events.append(FunctionEvent(GEMM, Kind.GPU, t, t + gd, w))
-                paint("gpu_sm", t, t + gd,
-                      throttle.util if throttle else 0.92)
+                paint("gpu_sm", t, t + gd, gpu_util, jitter=gpu_jit)
                 t += gd
             # 3) h2d memcpy
             md = 0.01 * iter_s
@@ -281,15 +323,16 @@ class FleetSimulator:
             t += md
             # 4) backward GEMMs
             for _ in range(cfg.n_bwd_gemms):
-                gd = g * (throttle.slowdown if throttle else 1.0)
+                gd = g * gpu_slow
                 events.append(FunctionEvent(GEMM, Kind.GPU, t, t + gd, w))
-                paint("gpu_sm", t, t + gd,
-                      throttle.util if throttle else 0.92)
+                paint("gpu_sm", t, t + gd, gpu_util, jitter=gpu_jit)
                 t += gd
             # 5) collectives (AllGather + AllReduce)
             cd = 0.1 * iter_s
             if nv_group:
                 cd *= nvlink[0].slowdown
+            if degnic:
+                cd *= 1.0 / degnic.rho
             if ring_traces is not None:
                 cd *= 1.0 / self._fault(F.RingSlowLink)[0].rho * 0.8
             events.append(FunctionEvent(ALLGATHER, Kind.COMM, t, t + cd, w))
@@ -302,6 +345,10 @@ class FleetSimulator:
                 # bursts like any non-driving member (§3 Fig. 5b)
                 paint("pcie_tx", t, t + cd,
                       self._fault(F.RingSlowLink)[0].rho, jitter=0.15)
+            elif degnic:
+                # degraded NIC: collectives crawl at low, STABLE link
+                # utilization while the fleet is healthy (DESIGN.md §12c)
+                paint("pcie_tx", t, t + cd, 0.18, jitter=0.01)
             else:
                 paint("pcie_tx", t, t + cd,
                       0.85 if nv_self else (0.35 if nv_group else 0.55))
@@ -326,6 +373,33 @@ class FleetSimulator:
             events=[e for e in events if e.start < self.cfg.window_s],
             streams={k: SampleStream(rate, 0.0, v)
                      for k, v in streams.items()})
+
+    # -- numerics channel (DESIGN.md §12a) ---------------------------------
+    def numerics_window(self, n_iters: int, seed: int, t0: float,
+                        t1: float) -> List[Tuple[float, float, float]]:
+        """One window of job-level (t, loss, grad_norm) samples.
+
+        Seeded from ``(seed, 1 << 21)`` (the ring traces own ``1 << 20``)
+        with exactly two draws per iteration REGARDLESS of active faults,
+        so the stream is a pure function of (seed, n_iters): every worker
+        process reproduces it, ``self.rng`` is never touched, and injecting
+        or curing a numerics fault cannot shift any other stream — the six
+        original faults stay byte-identical.
+        """
+        rng = np.random.default_rng((seed, 1 << 21))
+        spike = self._fault(F.LossSpike)
+        grad = self._fault(F.GradExplosion)
+        samples: List[Tuple[float, float, float]] = []
+        for i in range(n_iters):
+            t = t0 + (i + 1) * (t1 - t0) / max(1, n_iters)
+            loss = 2.5 * (1 + 0.01 * rng.standard_normal())
+            g = 1.0 * (1 + 0.02 * rng.standard_normal())
+            if spike:
+                loss *= spike[0].magnitude
+            if grad:
+                g = float("nan") if grad[0].nan else g * grad[0].magnitude
+            samples.append((float(t), float(loss), float(g)))
+        return samples
 
     # -- pattern mode (scaling benchmarks) ---------------------------------
     def synth_patterns(self, n_functions: int = 20

@@ -2,6 +2,8 @@
 cross-window EMA aggregation, incident lifecycles with a closed
 act->verify->escalate mitigation loop, and differential escalation over
 the fleet-batched diagnosis path."""
+from repro.online.catalog import (FAULT_CLASSES, SCENARIOS, ExpectedIncident,
+                                  Scenario, evaluate, run_scenario)
 from repro.online.ema import EmaPatternAggregator
 from repro.online.escalation import EscalationPolicy
 from repro.online.incident import (CONFIRMED, ESCALATED, MITIGATING, OPEN,
@@ -17,6 +19,8 @@ from repro.online.workload import (SimWorkload, WindowData, WorkloadSource,
                                    synth_anchor_events)
 
 __all__ = [
+    "FAULT_CLASSES", "SCENARIOS", "ExpectedIncident", "Scenario",
+    "evaluate", "run_scenario",
     "EmaPatternAggregator", "EscalationPolicy",
     "OPEN", "CONFIRMED", "MITIGATING", "VERIFYING", "RESOLVED",
     "ESCALATED", "STATES",

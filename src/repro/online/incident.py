@@ -70,6 +70,11 @@ class Incident:
     opened_at: float
     trigger: Optional[Trigger]
     state: str = OPEN
+    #: detector channel this incident lives on ('perf' | 'numerics') —
+    #: part of the incident's identity alongside ``function``: a numerics
+    #: incident and a perf incident are distinct problems even when their
+    #: function names collide, and are never recurrence-linked
+    channel: str = "perf"
     function: str = ""                  # set at confirmation
     kind: Optional[object] = None
     workers: Tuple[int, ...] = ()       # last implicated worker set
@@ -147,11 +152,12 @@ class IncidentManager:
         #: proof the plan failed
         self.settle_windows = settle_windows
         self.incidents: List[Incident] = []
-        self._candidates: Dict[str, int] = {}
-        #: functions of live ESCALATED incidents -> consecutive clear
-        #: windows since escalation; a fresh incident for the function is
-        #: suppressed until the signature has genuinely cleared once
-        self._suppressed: Dict[str, int] = {}
+        #: (channel, function) -> consecutive abnormal-window streak
+        self._candidates: Dict[Tuple[str, str], int] = {}
+        #: (channel, function) of live ESCALATED incidents -> consecutive
+        #: clear windows since escalation; a fresh incident for the
+        #: signature is suppressed until it has genuinely cleared once
+        self._suppressed: Dict[Tuple[str, str], int] = {}
         self._next_id = 0
 
     # -- views -------------------------------------------------------------
@@ -159,40 +165,52 @@ class IncidentManager:
     def active(self) -> List[Incident]:
         return [i for i in self.incidents if i.active]
 
-    def by_function(self, function: str) -> Optional[Incident]:
+    def by_function(self, function: str, channel: str = "perf"
+                    ) -> Optional[Incident]:
         for inc in self.incidents:
-            if inc.active and inc.function == function:
+            if inc.active and inc.function == function \
+                    and inc.channel == channel:
                 return inc
         return None
 
-    def _pending(self) -> Optional[Incident]:
-        """The unconfirmed OPEN incident holding the latest trigger."""
+    def _pending(self, channel: str = "perf") -> Optional[Incident]:
+        """The unconfirmed OPEN incident holding the latest trigger on
+        this channel."""
         for inc in self.incidents:
-            if inc.active and inc.state == OPEN:
+            if inc.active and inc.state == OPEN \
+                    and inc.channel == channel:
                 return inc
         return None
 
     # -- detector events ----------------------------------------------------
     def on_trigger(self, trig: Trigger) -> Optional[Incident]:
-        """A detector trigger opens at most one incident: while ANY incident
-        is active the trigger is a reminder of the ongoing degradation, not
-        a new problem (the detector is job-level and cannot tell two
-        concurrent faults apart — localization can, and does, below)."""
-        if self.active:
+        """A detector trigger opens at most one incident PER CHANNEL: while
+        an incident is active on the trigger's channel the trigger is a
+        reminder of the ongoing degradation, not a new problem (each
+        detector is job-level and cannot tell two concurrent faults apart —
+        localization can, and does, below).  A numerics trigger during an
+        open perf incident IS a new problem: the channels are independent
+        sensors."""
+        channel = getattr(trig, "channel", "perf")
+        if any(i.channel == channel for i in self.active):
             return None
-        inc = Incident(id=self._next_id, opened_at=trig.time, trigger=trig)
+        inc = Incident(id=self._next_id, opened_at=trig.time, trigger=trig,
+                       channel=channel)
         inc.history.append((trig.time, OPEN))
         self._next_id += 1
         self.incidents.append(inc)
         return inc
 
     def on_recovery(self, rec: Recovery) -> List[Incident]:
-        """Detector recovery re-arm: the job-level metric is healthy again.
-        Every active incident whose signature is currently clear resolves;
-        an unconfirmed OPEN incident (trigger never localized) resolves as
-        transient."""
+        """Detector recovery re-arm: the job-level metric on the recovery's
+        channel is healthy again.  Every active incident ON THAT CHANNEL
+        whose signature is currently clear resolves; an unconfirmed OPEN
+        incident (trigger never localized) resolves as transient."""
+        channel = getattr(rec, "channel", "perf")
         resolved = []
         for inc in self.active:
+            if inc.channel != channel:
+                continue
             if inc.state == OPEN or inc.windows_clear >= 1:
                 inc.resolved_at = rec.time
                 inc._transition(RESOLVED, rec.time)
@@ -218,15 +236,17 @@ class IncidentManager:
                 inc.windows_since_apply += 1
         for d in diagnoses:
             a: Abnormality = d.abnormality
-            seen_fns.add(a.function)
-            if a.function in self._suppressed:
+            ch = getattr(a, "channel", "perf")
+            sig = (ch, a.function)
+            seen_fns.add(sig)
+            if sig in self._suppressed:
                 # the escalated incident's fault is still live: a human
                 # owns it, no fresh incident flaps underneath them
-                self._suppressed[a.function] = 0
+                self._suppressed[sig] = 0
                 continue
-            inc = self.by_function(a.function)
+            inc = self.by_function(a.function, ch)
             if inc is None:
-                pending = self._pending()
+                pending = self._pending(ch)
                 if pending is not None:
                     inc = pending          # the trigger's culprit, found
                 else:
@@ -234,16 +254,16 @@ class IncidentManager:
                     # the trigger: distinct function -> distinct incident,
                     # but only after it persists (hysteresis against EMA
                     # residue flapping one window after a mitigation)
-                    streak = self._candidates.get(a.function, 0) + 1
-                    self._candidates[a.function] = streak
+                    streak = self._candidates.get(sig, 0) + 1
+                    self._candidates[sig] = streak
                     if streak < self.confirm_windows:
                         continue
                     inc = Incident(id=self._next_id, opened_at=t,
-                                   trigger=None)
+                                   trigger=None, channel=ch)
                     inc.history.append((t, OPEN))
                     self._next_id += 1
                     self.incidents.append(inc)
-                self._candidates.pop(a.function, None)
+                self._candidates.pop(sig, None)
                 inc.function = a.function
                 inc.kind = a.kind
                 self._link_recurrence(inc, a)
@@ -265,16 +285,16 @@ class IncidentManager:
                 # grace: verification failed
                 self._escalate(inc, t)
                 changed.append(inc)
-        # candidate streaks break the first window their function is clean
-        self._candidates = {f: c for f, c in self._candidates.items()
-                            if f in seen_fns}
-        # escalated-function suppression lifts once the signature has been
-        # genuinely clear (its NEXT appearance is a recurrence)
-        for fn in list(self._suppressed):
-            if fn not in seen_fns:
-                self._suppressed[fn] += 1
-                if self._suppressed[fn] >= self.clear_windows:
-                    del self._suppressed[fn]
+        # candidate streaks break the first window their signature is clean
+        self._candidates = {s: c for s, c in self._candidates.items()
+                            if s in seen_fns}
+        # escalated-signature suppression lifts once it has been genuinely
+        # clear (its NEXT appearance is a recurrence)
+        for s in list(self._suppressed):
+            if s not in seen_fns:
+                self._suppressed[s] += 1
+                if self._suppressed[s] >= self.clear_windows:
+                    del self._suppressed[s]
         need_clear = 1 if detector_healthy else self.clear_windows
         for inc in self.active:
             if hit.get(inc.id) or inc.state == OPEN:
@@ -302,18 +322,20 @@ class IncidentManager:
                 or inc.escalations > self.max_escalations:
             inc.escalated_at = t
             inc._transition(ESCALATED, t)
-            self._suppressed[inc.function] = 0
+            self._suppressed[(inc.channel, inc.function)] = 0
         else:
             inc.rung += 1
 
     def _link_recurrence(self, inc: Incident, a: Abnormality) -> None:
         """Link a freshly-confirmed incident to the most recent terminal
-        incident sharing its signature (function + overlapping worker
-        set)."""
+        incident sharing its signature (channel + function + overlapping
+        worker set).  The channel check is what keeps a numerics incident
+        from linking to a prior PERF incident on the same function."""
         sig = {int(w) for w in a.workers}
         for prior in reversed(self.incidents):
             if prior is inc or prior.active \
-                    or prior.function != inc.function:
+                    or prior.function != inc.function \
+                    or prior.channel != inc.channel:
                 continue
             pw = set(prior.workers)
             if pw == sig or (pw & sig):

@@ -36,16 +36,10 @@ from repro.core import faults as F
 from repro.core.mitigation import Action, MitigationPlan
 from repro.core.simulation import FleetSimulator
 
-#: which Action actually cures each injected fault model, per the paper's
-#: §6 case studies — the scenario-level default for ``ScheduledFault.cures``
-DEFAULT_CURES: Dict[type, Tuple[Action, ...]] = {
-    F.GpuThrottle: (Action.REPLACE_HOSTS,),
-    F.NvlinkDown: (Action.REPLACE_HOSTS,),
-    F.RingSlowLink: (Action.REPLACE_HOSTS,),
-    F.SlowDataloader: (Action.MIGRATE_DATALOADER,),
-    F.CpuBoundForward: (Action.FLAG_CODE,),
-    F.AsyncGc: (Action.SYNCHRONIZE_GC,),
-}
+#: which Action actually cures each injected fault model — the playbook
+#: lives with the fault data (``repro.core.faults.default_cures``); this
+#: module-level view keeps the engine's historical import path working
+DEFAULT_CURES: Dict[type, Tuple[Action, ...]] = F.default_cures()
 
 
 @dataclass

@@ -20,7 +20,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.detector import DetectorConfig, Trigger
+from repro.core.detector import (DetectorConfig, NumericsConfig,
+                                 NumericsDetector, Trigger)
+from repro.core.events import Kind
 from repro.core.localizer import Abnormality
 from repro.core.report import (Diagnosis, build_report, format_report,
                                format_transport)
@@ -69,12 +71,16 @@ class OnlinePipeline:
                  summarize_backend=None, alpha: float = 0.6,
                  escalation: Optional[EscalationPolicy] = None,
                  clear_windows: int = 2, verify_windows: int = 2,
-                 max_escalations: int = 2, settle_windows: int = 1):
+                 max_escalations: int = 2, settle_windows: int = 1,
+                 numerics_cfg: Optional[NumericsConfig] = None):
         self.n_workers = int(n_workers)
         self.service = PerfTrackerService(
             family=family, detector_cfg=detector_cfg,
             summarize_backend=summarize_backend)
         self.detector = self.service.detector
+        #: job-level numerics channel (DESIGN.md §12a): loss / grad-norm
+        #: samples stream in via ``feed_numerics`` beside the anchor stream
+        self.numerics = NumericsDetector(numerics_cfg)
         self.ema = EmaPatternAggregator(self.n_workers, alpha=alpha)
         self.incidents = IncidentManager(self.n_workers,
                                          clear_windows=clear_windows,
@@ -90,6 +96,7 @@ class OnlinePipeline:
         self._members: Optional[np.ndarray] = None
         self.windows: List[WindowReport] = []
         self._recoveries_seen = 0
+        self._num_recoveries_seen = 0
 
     def attach_mitigator(self, engine) -> None:
         """Install a ``repro.online.mitigation.MitigationEngine``: every
@@ -124,6 +131,27 @@ class OnlinePipeline:
                 triggers.append(trig)
                 self.incidents.on_trigger(trig)
             self._drain_recoveries()
+        return triggers
+
+    def feed_numerics(self, samples: Sequence[Tuple[float, float, float]]
+                      ) -> List[Trigger]:
+        """Stream job-level (t, loss, grad_norm) samples into the numerics
+        channel.  Triggers and recoveries fold into the SAME incident set
+        as the perf channel — on their own ``channel='numerics'`` lane, so
+        a loss spike during an open perf incident is a distinct incident.
+
+        Unlike a perf recovery, a numerics recovery does NOT reset the EMA:
+        numerics evidence never enters the pattern aggregator, and perf
+        incidents must keep their smoothed evidence."""
+        triggers = []
+        for t, loss, grad_norm in samples:
+            for trig in self.numerics.feed(t, loss, grad_norm):
+                triggers.append(trig)
+                self.incidents.on_trigger(trig)
+        recs = self.numerics.recoveries
+        for rec in recs[self._num_recoveries_seen:]:
+            self.incidents.on_recovery(rec)
+        self._num_recoveries_seen = len(recs)
         return triggers
 
     def poll_blockage(self, now: float) -> Optional[Trigger]:
@@ -229,12 +257,25 @@ class OnlinePipeline:
             self.set_membership(self.mitigator.sim.active_workers)
         abn: List[Abnormality] = self.service.localizer.localize(
             pats, kinds, present=self._members)
+        # outstanding numerics signals ride the same diagnosis path as a
+        # synthesized job-level abnormality: no worker set (the channel is
+        # job-level), kind NUMERICS, full-box expectation — everything
+        # downstream (report/incident/ladder) treats it like any other
+        abn.extend(Abnormality(
+            function=f"numerics.{signal}",
+            workers=np.zeros(0, np.int64), kind=Kind.NUMERICS,
+            d_expect=np.array([1.0]), delta=np.array([0.0]),
+            patterns=np.array([[1.0, 0.0, 0.0]]),
+            typical=np.zeros(3), reason="numerics", channel="numerics")
+            for signal in self.numerics.outstanding())
         # hint fractions size over the ACTIVE mesh, like plan sizing —
         # standbys/replaced rows must not dilute them
         diagnoses = build_report(abn, self.incidents.fleet_size)
         localize_s = time.perf_counter() - t1
         changed = self.incidents.on_window(
-            t, diagnoses, detector_healthy=self.detector.healthy)
+            t, diagnoses,
+            detector_healthy=(self.detector.healthy
+                              and self.numerics.healthy))
         mitigations = []
         if self.mitigator is not None:
             mitigations = self.mitigator.step(self.incidents, t=t,

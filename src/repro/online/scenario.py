@@ -51,7 +51,7 @@ from repro.online.escalation import EscalationPolicy
 from repro.online.mitigation import MitigationEngine, plan_to_wire
 from repro.online.pipeline import OnlinePipeline, WindowReport
 from repro.online.workload import (SimWorkload, WorkloadSource,
-                                   merge_anchor_durations,
+                                   merge_anchor_durations, merge_numerics,
                                    synth_anchor_events)
 
 #: per-window profile seed offset (must match _mp_worker_main)
@@ -195,6 +195,7 @@ class ScenarioRunner:
             wd = self.workload.run_window(i, faults,
                                           self.iters_per_window, rates)
             self.pipeline.feed_anchors(wd.anchors)
+            self.pipeline.feed_numerics(wd.numerics)
             self.pipeline.poll_blockage(wd.clock)
             # profiles come from the ACTIVE fleet only; with standbys
             # and/or after a re-mesh the absent rows are present-masked
@@ -347,6 +348,13 @@ class ScenarioRunner:
                 anchors = self.sim.anchor_events(self.iters_per_window,
                                                  t0=t0)
                 self.pipeline.feed_anchors(anchors)
+                # the numerics stream is job-level and deterministic per
+                # (seed, window) — the parent generates it itself, same as
+                # the anchor stream (children never ship it for sims)
+                self.pipeline.feed_numerics(self.sim.numerics_window(
+                    self.iters_per_window,
+                    self.sim_cfg.seed + _WINDOW_SEED_STRIDE * (i + 1),
+                    t0, self.sim.anchor_clock))
                 self.pipeline.poll_blockage(self.sim.anchor_clock)
                 rates = self.pipeline.rates()
                 active = [int(w) for w in self.sim.active_workers]
@@ -466,6 +474,10 @@ class ScenarioRunner:
                     [batch.anchors[w] for w in sorted(batch.anchors)])
                 anchors, clock = synth_anchor_events(merged, t0)
                 self.pipeline.feed_anchors(anchors)
+                num = getattr(batch, "numerics", None) or {}
+                if num:
+                    self.pipeline.feed_numerics(merge_numerics(
+                        [num[w] for w in sorted(num)], merged, t0))
                 self.pipeline.poll_blockage(clock)
                 report = self.pipeline.window_tick_batch(batch, t=clock,
                                                          rates=rates)

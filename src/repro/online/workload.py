@@ -24,7 +24,7 @@ emits.
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -45,6 +45,9 @@ class WindowData:
     workers: np.ndarray                  # active (mesh-member) worker ids
     clock: float                         # workload clock at window end
     t0: float                            # workload clock at window start
+    #: job-level (t, loss, grad_norm) samples for the numerics channel
+    #: (DESIGN.md §12a); empty when the workload has no numerics stream
+    numerics: List[Tuple[float, float, float]] = field(default_factory=list)
 
 
 class WorkloadSource(ABC):
@@ -86,6 +89,31 @@ def merge_anchor_durations(per_worker: Sequence[Sequence[float]]
     for i in range(n):
         vals = [d[i] for d in per_worker if i < len(d)]
         out.append(float(max(vals)))
+    return out
+
+
+def merge_numerics(per_worker: Sequence[Sequence[Tuple[float, float]]],
+                   durations: Sequence[float], t0: float
+                   ) -> List[Tuple[float, float, float]]:
+    """Job-level (t, loss, grad_norm) samples from per-worker per-iteration
+    (loss, grad_norm) pairs: worst (max) value per iteration index, with
+    non-finite values winning outright — one worker's NaN IS the job's NaN.
+    Timestamps come from the measured iteration ``durations`` chained on
+    the job clock starting at ``t0`` (same clock as the anchor stream)."""
+    def worst(vals: List[float]) -> float:
+        for v in vals:
+            if v != v or abs(v) == float("inf"):
+                return v
+        return max(vals)
+
+    n = max((len(d) for d in per_worker), default=0)
+    out: List[Tuple[float, float, float]] = []
+    t = float(t0)
+    for i in range(n):
+        t += float(durations[i]) if i < len(durations) else 0.0
+        pairs = [d[i] for d in per_worker if i < len(d)]
+        out.append((t, worst([float(p[0]) for p in pairs]),
+                    worst([float(p[1]) for p in pairs])))
     return out
 
 
@@ -138,6 +166,9 @@ class SimWorkload(WorkloadSource):
         anchors = self.sim.anchor_events(iters, t0=t0)
         profiles = self.sim.profile_window(rates=rates,
                                            seed=self.seed_of(window))
+        numerics = self.sim.numerics_window(iters, self.seed_of(window),
+                                            t0, self.sim.anchor_clock)
         return WindowData(anchors=anchors, profiles=profiles,
                           workers=self.sim.active_workers,
-                          clock=self.sim.anchor_clock, t0=t0)
+                          clock=self.sim.anchor_clock, t0=t0,
+                          numerics=numerics)

@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.core.detector import DetectorConfig
 from repro.online.workload import (WindowData, WorkloadSource,
-                                   merge_anchor_durations,
+                                   merge_anchor_durations, merge_numerics,
                                    synth_anchor_events)
 
 
@@ -198,11 +198,22 @@ class _TrainWorker:
         t.gc_every = 1
 
     def run_window(self, iters: int, rate: Optional[float] = None):
-        """One profiling window: returns (durations, WorkerProfile)."""
+        """One profiling window: returns (durations, WorkerProfile).
+
+        Side effect: ``self.window_numerics`` holds the window's REAL
+        per-iteration (loss, grad_norm) pairs from the train step's
+        metrics — the numerics channel's raw material (DESIGN.md §12a)."""
         if rate is not None:
             self.tracer.set_rate(float(rate))
         self.tracer.start_window()
-        durs = [self.step() for _ in range(iters)]
+        durs: List[float] = []
+        self.window_numerics: List[Tuple[float, float]] = []
+        for _ in range(iters):
+            durs.append(self.step())
+            m = self.last_metrics or {}
+            self.window_numerics.append(
+                (float(m.get("loss", 0.0)),
+                 float(m.get("grad_norm", 0.0))))
         return durs, self.tracer.stop_window()
 
     def close(self) -> None:
@@ -267,17 +278,19 @@ class TrainerWorkload(WorkloadSource):
         self._ensure_workers()
         _install_faults(self.workers, faults)
         t0 = self._clock
-        per_durs, profiles = [], []
+        per_durs, per_num, profiles = [], [], []
         for tw in self.workers:       # sequential: per-worker cpu streams
             r = None if rates is None else float(rates[tw.worker])
             durs, prof = tw.run_window(iters, rate=r)
             per_durs.append(durs)
+            per_num.append(tw.window_numerics)
             profiles.append(prof)
-        anchors, self._clock = synth_anchor_events(
-            merge_anchor_durations(per_durs), t0)
+        merged = merge_anchor_durations(per_durs)
+        anchors, self._clock = synth_anchor_events(merged, t0)
         return WindowData(anchors=anchors, profiles=profiles,
                           workers=np.arange(self.n), clock=self._clock,
-                          t0=t0)
+                          t0=t0,
+                          numerics=merge_numerics(per_num, merged, t0))
 
     def close(self) -> None:
         for tw in self.workers:
@@ -328,7 +341,7 @@ def trainer_worker_main(addresses, worker_ids, n_total, cfgs, schedule,
                 r = None if rates is None else float(rates[tw.worker])
                 durs, prof = tw.run_window(int(iters_per_window), rate=r)
                 d = daemons[tw.worker]
-                d.send_anchors(i, durs)
+                d.send_anchors(i, durs, numerics=tw.window_numerics)
                 d.process_window(i, prof)
     finally:
         for d in daemons.values():

@@ -42,6 +42,10 @@ class WindowBatch:
     #: per-worker measured iteration durations (REAL workloads only; empty
     #: for simulator runs, whose parents own the anchor stream)
     anchors: Dict[int, List[float]] = field(default_factory=dict)
+    #: per-worker per-iteration (loss, grad_norm) pairs for the numerics
+    #: channel (only when the workload ships them on its anchors frames)
+    numerics: Dict[int, List[Tuple[float, float]]] = field(
+        default_factory=dict)
     ended: Set[int] = field(default_factory=set)
     duplicates: int = 0                       # deduped (window, worker) copies
     client_dropped: int = 0                   # cumulative backpressure drops
@@ -139,8 +143,13 @@ class WindowCollector:
                 b = self._batch(int(msg["window"]))
                 # first copy wins, like uploads (the frame is undroppable,
                 # so a duplicate is a retransmit after reconnect)
-                b.anchors.setdefault(int(msg["worker"]),
+                w = int(msg["worker"])
+                b.anchors.setdefault(w,
                                      [float(d) for d in msg.get("durs", [])])
+                if msg.get("numerics") is not None:
+                    b.numerics.setdefault(
+                        w, [(float(p[0]), float(p[1]))
+                            for p in msg["numerics"]])
         elif t == "window_end":
             with self._cv:
                 if int(msg["window"]) <= self._popped_through:

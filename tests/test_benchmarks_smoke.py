@@ -22,6 +22,8 @@ SHRINK = {
     "REPRO_BENCH_ONLINE_W": "8",
     "REPRO_BENCH_ONLINE_WINDOWS": "6",
     "REPRO_BENCH_ONLINE_CASES": "C1P1_gpu_throttle",
+    "REPRO_BENCH_ABILITY_CASES": "C1P1_gpu_throttle",
+    "REPRO_BENCH_ABILITY_SCENARIOS": "N1_loss_spike",
     "REPRO_BENCH_WIRE_W": "4",
     "REPRO_BENCH_WIRE_WINDOWS": "2",
     "REPRO_BENCH_MITIGATION_W": "8",

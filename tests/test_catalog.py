@@ -1,0 +1,98 @@
+"""ISSUE 8: the gated fault-scenario catalog (DESIGN.md §12).
+
+  * every declared scenario runs under the standard deployment shape and
+    meets its declared expectations (resolved with the right first plan
+    and zero escalations, or — for the bad-standby family — honestly
+    escalated);
+  * the catalog is big enough: >= 15 scenarios spanning all four fault
+    classes;
+  * the diagnosis path stays scenario-agnostic: no scenario name appears
+    in any detector/localizer/report/planner/incident module — adding a
+    scenario is adding DATA, never a special case.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.online.catalog import (FAULT_CLASSES, SCENARIOS, by_name,
+                                  evaluate, run_scenario)
+
+REPO = Path(__file__).resolve().parents[1]
+
+#: the diagnosis path: everything between raw profiles and executed plans
+DIAGNOSIS_PATH = [
+    "src/repro/core/detector.py",
+    "src/repro/core/localizer.py",
+    "src/repro/core/expectations.py",
+    "src/repro/core/report.py",
+    "src/repro/core/mitigation.py",
+    "src/repro/online/pipeline.py",
+    "src/repro/online/incident.py",
+    "src/repro/online/mitigation.py",
+]
+
+
+# -- the matrix ---------------------------------------------------------------
+
+@pytest.mark.parametrize("sc", SCENARIOS, ids=[s.name for s in SCENARIOS])
+def test_scenario_meets_expectations(sc):
+    runner, res = run_scenario(sc)
+    rows = evaluate(sc, runner, res)
+    assert rows, sc.name
+    for row in rows:
+        assert row["ok"], row
+        if row["resolved"]:
+            assert row["escalations"] == 0
+            assert row["wtr"] is not None and row["wtr"] >= 0
+        else:
+            # the honest-failure family: escalated, never green-washed
+            assert row["escalated"] and row["wtr"] is None
+
+
+# -- catalog shape ------------------------------------------------------------
+
+def test_catalog_size_and_class_coverage():
+    assert len(SCENARIOS) >= 15
+    by_class = {c: [s for s in SCENARIOS if s.fault_class == c]
+                for c in FAULT_CLASSES}
+    assert set(by_class) == set(FAULT_CLASSES)
+    assert len(by_class["perf"]) == 6            # the six paper originals
+    assert len(by_class["numerics"]) >= 3
+    assert len(by_class["host"]) >= 2
+    assert len(by_class["environment"]) >= 3
+    # every scenario's class is declared, names are unique
+    assert all(s.fault_class in FAULT_CLASSES for s in SCENARIOS)
+    assert len({s.name for s in SCENARIOS}) == len(SCENARIOS)
+    # the bad-standby family exists and is declared escalated
+    esc = [s for s in SCENARIOS
+           if any(e.outcome == "escalated" for e in s.expect)]
+    assert len(esc) >= 2
+    assert all(s.fault_class == "environment" for s in esc)
+
+
+def test_by_name():
+    assert by_name("C1P1_gpu_throttle").fault_class == "perf"
+    with pytest.raises(KeyError):
+        by_name("no_such_scenario")
+
+
+# -- the invariant: scenarios are data ----------------------------------------
+
+def test_diagnosis_path_is_scenario_agnostic():
+    """Grep the diagnosis-path modules for scenario names: a match means
+    somebody special-cased a scenario instead of teaching the playbook a
+    pattern, which is exactly how a 15-scenario matrix rots."""
+    names = [s.name for s in SCENARIOS]
+    offenders = []
+    for rel in DIAGNOSIS_PATH:
+        path = REPO / rel
+        assert path.exists(), rel
+        text = path.read_text()
+        offenders += [(rel, n) for n in names if n in text]
+    assert offenders == [], offenders
+
+
+def test_diagnosis_path_does_not_import_catalog():
+    for rel in DIAGNOSIS_PATH:
+        text = (REPO / rel).read_text()
+        assert "catalog" not in text, rel

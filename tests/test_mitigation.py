@@ -101,6 +101,18 @@ PLAN_MATRIX = [
     pytest.param(_diag(Kind.MEM, "memcpy_h2d", [4], mu=0.7),
                  Action.FLAG_CODE, None,
                  id="mem_explicit"),
+    # -- ISSUE 8: the new fault classes ------------------------------------
+    pytest.param(_diag(Kind.NUMERICS, "numerics.loss", [0]),
+                 Action.ROLLBACK_TO_CHECKPOINT, Action.FLAG_CODE,
+                 id="numerics_rollback"),
+    pytest.param(_diag(Kind.PYTHON, FORWARD_STACK, [7, 19],
+                       mu=0.35, sigma=0.003),
+                 Action.REPLACE_HOSTS, Action.FLAG_CODE,
+                 id="python_cgroup_quota"),
+    pytest.param(_diag(Kind.PYTHON, DATALOADER_STACK, [2, 9],
+                       mu=0.2, sigma=0.12),
+                 Action.REPLACE_HOSTS, Action.MIGRATE_DATALOADER,
+                 id="python_pagecache_thrash"),
 ]
 
 

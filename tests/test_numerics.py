@@ -1,0 +1,300 @@
+"""ISSUE 8: the numerics channel (DESIGN.md §12a).
+
+Three layers of coverage:
+
+  * the ``NumericsDetector`` state machines — warmup, single-spike
+    forgiveness, confirm/recover hysteresis, immediate non-finite firing,
+    and the no-baseline-poisoning rule;
+  * channel identity in the ``IncidentManager`` — the regression fixed in
+    this PR: signature matching includes the detector channel, so a
+    numerics incident and a perf incident on the same function are
+    distinct problems, resolve independently, and never recurrence-link;
+  * the pipeline end-to-end — a loss spike during an OPEN perf incident
+    produces two incidents that both run to resolution (catalog scenario
+    ``N4_loss_spike_under_perf``).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.detector import (NumericsConfig, NumericsDetector, Recovery,
+                                 Trigger)
+from repro.core.events import Kind
+from repro.core.localizer import Abnormality
+from repro.core.mitigation import Action
+from repro.core.report import Diagnosis, root_cause_hint
+from repro.online.incident import (CONFIRMED, ESCALATED, OPEN, RESOLVED,
+                                   IncidentManager)
+
+W = 24
+LOSS_FN = "numerics.loss"
+GRAD_FN = "numerics.grad_norm"
+
+
+def warmed(loss=2.0, grad=1.0, n=16, cfg=None):
+    """A detector past warmup with a stable healthy baseline."""
+    det = NumericsDetector(cfg)
+    for i in range(n):
+        assert det.feed(float(i), loss, grad) == []
+    return det
+
+
+# -- NumericsDetector state machines ------------------------------------------
+
+def test_warmup_suppresses_triggers():
+    det = NumericsDetector()
+    # wild values during warmup are baseline-building, not anomalies
+    for i in range(det.cfg.warmup - 1):
+        assert det.feed(float(i), 10.0 ** i, 5.0 ** i) == []
+    assert det.healthy
+
+
+def test_single_finite_spike_recovers_silently():
+    """Loss routinely jumps for one step on a hard batch: one abnormal
+    sample must neither trigger nor emit a recovery."""
+    det = warmed()
+    assert det.feed(16.0, 50.0, 1.0) == []          # spike, unconfirmed
+    assert det.feed(17.0, 2.0, 1.0) == []           # back to healthy
+    assert det.triggers == [] and det.recoveries == []
+    assert det.healthy and det.outstanding() == []
+
+
+def test_confirmed_spike_triggers_then_recovers():
+    det = warmed()
+    assert det.feed(16.0, 50.0, 1.0) == []
+    trigs = det.feed(17.0, 50.0, 1.0)               # second consecutive
+    assert len(trigs) == 1
+    t = trigs[0]
+    assert isinstance(t, Trigger)
+    assert t.reason == "loss_spike" and t.channel == "numerics"
+    assert t.mean_duration == 50.0 and t.baseline == pytest.approx(2.0)
+    assert not det.healthy and det.outstanding() == ["loss"]
+    # further abnormal samples stay silent (one trigger per episode)
+    assert det.feed(18.0, 60.0, 1.0) == []
+    # recovery needs `recover` consecutive healthy samples
+    assert det.feed(19.0, 2.0, 1.0) == []
+    assert det.recoveries == []
+    assert det.feed(20.0, 2.0, 1.0) == []
+    assert [r.reason for r in det.recoveries] == ["loss_spike"]
+    assert det.recoveries[0].channel == "numerics"
+    assert det.healthy
+
+
+def test_grad_norm_uses_looser_ratio():
+    det = warmed(grad=1.0)
+    ratio = det.cfg.grad_ratio
+    # 2.5x the grad baseline is jitter (< grad_ratio), not an explosion
+    for i in range(4):
+        assert det.feed(16.0 + i, 2.0, 2.5) == []
+    trigs = []
+    for i in range(2):
+        trigs += det.feed(20.0 + i, 2.0, ratio * 1.5)
+    assert [t.reason for t in trigs] == ["grad_explosion"]
+
+
+def test_non_finite_fires_immediately_even_in_warmup():
+    """There is no benign single-sample NaN: confirmation is skipped."""
+    det = NumericsDetector()
+    trigs = det.feed(0.0, 1.0, float("nan"))
+    assert [t.reason for t in trigs] == ["grad_explosion"]
+    assert "non-finite" in trigs[0].detail
+    det2 = warmed()
+    trigs2 = det2.feed(16.0, float("inf"), 1.0)
+    assert [t.reason for t in trigs2] == ["loss_spike"]
+
+
+def test_abnormal_samples_never_poison_baseline():
+    """The spike must not fold into the median it is judged by: after a
+    long abnormal episode the ORIGINAL baseline still judges recovery."""
+    det = warmed(loss=2.0)
+    det.feed(16.0, 50.0, 1.0)
+    det.feed(17.0, 50.0, 1.0)                       # triggered
+    for i in range(40):                             # long abnormal episode
+        det.feed(18.0 + i, 50.0, 1.0)
+    # healthy-at-the-old-baseline samples recover it; had 50.0 polluted
+    # the median, 2.0 would read as healthy-forever and 4.5 as abnormal
+    det.feed(60.0, 4.5, 1.0)
+    assert det._hist["loss"].count(50.0) == 0
+    det.feed(61.0, 2.0, 1.0)
+    det.feed(62.0, 2.0, 1.0)
+    assert det.healthy
+
+
+def test_both_signals_fire_independently():
+    det = warmed()
+    det.feed(16.0, 50.0, 10.0)
+    trigs = det.feed(17.0, 50.0, 10.0)
+    assert sorted(t.reason for t in trigs) == ["grad_explosion",
+                                               "loss_spike"]
+    assert sorted(det.outstanding()) == ["grad_norm", "loss"]
+
+
+def test_numerics_config_overrides():
+    det = warmed(cfg=NumericsConfig(confirm=1), n=12)
+    assert [t.reason for t in det.feed(12.0, 50.0, 1.0)] == ["loss_spike"]
+
+
+# -- channel identity in the IncidentManager ----------------------------------
+
+def _abn(fn, kind, workers=(0,), channel="perf"):
+    idx = np.asarray(sorted(workers), np.int64)
+    pats = np.tile(np.asarray([0.5, 0.5, 0.05], np.float32), (len(idx), 1))
+    return Abnormality(function=fn, workers=idx, kind=kind,
+                       d_expect=np.ones(len(idx)),
+                       delta=np.zeros(len(idx)), patterns=pats,
+                       typical=np.asarray([0.1, 0.5, 0.05], np.float32),
+                       channel=channel)
+
+
+def _diag(fn, kind, workers=(0,), channel="perf"):
+    a = _abn(fn, kind, workers, channel)
+    return Diagnosis(a, root_cause_hint(a, W))
+
+
+def _perf_trigger(t=0.0):
+    return Trigger("slowdown", t, 2.0, 1.0)
+
+
+def _num_trigger(t=0.0, reason="loss_spike"):
+    return Trigger(reason, t, 50.0, 2.0, channel="numerics")
+
+
+def test_numerics_trigger_opens_alongside_perf_incident():
+    """Regression: the channels are independent sensors — an active perf
+    incident must not swallow a numerics trigger (and vice versa), while
+    same-channel triggers stay reminders."""
+    mgr = IncidentManager(fleet_size=W)
+    perf = mgr.on_trigger(_perf_trigger(0.0))
+    assert perf is not None and perf.channel == "perf"
+    assert mgr.on_trigger(_perf_trigger(1.0)) is None       # reminder
+    num = mgr.on_trigger(_num_trigger(2.0))
+    assert num is not None and num.channel == "numerics"
+    assert mgr.on_trigger(_num_trigger(3.0)) is None        # reminder
+    assert len(mgr.active) == 2
+
+
+def test_same_function_different_channel_is_distinct_incident():
+    """The bug this PR fixes: signature matching keyed on function only,
+    so a numerics abnormality would fold into a perf incident whose
+    function name collided."""
+    mgr = IncidentManager(fleet_size=W)
+    mgr.on_trigger(_perf_trigger(0.0))
+    mgr.on_window(1.0, [_diag(LOSS_FN, Kind.PYTHON)])        # perf confirms
+    mgr.on_trigger(_num_trigger(2.0))
+    mgr.on_window(3.0, [_diag(LOSS_FN, Kind.PYTHON),
+                        _diag(LOSS_FN, Kind.NUMERICS, channel="numerics")])
+    assert mgr.by_function(LOSS_FN, "perf") is not None
+    assert mgr.by_function(LOSS_FN, "numerics") is not None
+    assert mgr.by_function(LOSS_FN, "perf") \
+        is not mgr.by_function(LOSS_FN, "numerics")
+
+
+def test_recovery_resolves_only_its_channel():
+    mgr = IncidentManager(fleet_size=W)
+    mgr.on_trigger(_perf_trigger(0.0))
+    mgr.on_trigger(_num_trigger(0.5))
+    resolved = mgr.on_recovery(Recovery("loss_spike", 1.0,
+                                        channel="numerics"))
+    assert [i.channel for i in resolved] == ["numerics"]
+    perf = mgr._pending("perf")
+    assert perf is not None and perf.state == OPEN           # untouched
+    resolved2 = mgr.on_recovery(Recovery("slowdown", 2.0))
+    assert [i.channel for i in resolved2] == ["perf"]
+
+
+def test_numerics_never_recurrence_links_to_perf():
+    """A resolved PERF incident on a function must not be claimed as the
+    ancestor of a later NUMERICS incident on the same function/workers."""
+    mgr = IncidentManager(fleet_size=W, confirm_windows=1)
+    mgr.on_trigger(_perf_trigger(0.0))
+    mgr.on_window(1.0, [_diag(GRAD_FN, Kind.PYTHON, workers=(3, 7))])
+    mgr.on_window(2.0, [])                       # signature clear once
+    mgr.on_recovery(Recovery("slowdown", 2.5))
+    prior = mgr.incidents[0]
+    assert prior.state == RESOLVED and not prior.active
+    mgr.on_trigger(_num_trigger(3.0))
+    changed = mgr.on_window(
+        4.0, [_diag(GRAD_FN, Kind.NUMERICS, workers=(3, 7),
+                    channel="numerics")])
+    num = next(i for i in changed if i.channel == "numerics")
+    assert num.state == CONFIRMED
+    assert num.recurrence_of is None
+    # the same signature ON the numerics channel does link
+    mgr.on_recovery(Recovery("loss_spike", 5.0, channel="numerics"))
+    num.windows_clear = 1
+    mgr.on_recovery(Recovery("loss_spike", 5.5, channel="numerics"))
+    assert not num.active
+    mgr.on_trigger(_num_trigger(6.0))
+    changed2 = mgr.on_window(
+        7.0, [_diag(GRAD_FN, Kind.NUMERICS, workers=(3, 7),
+                    channel="numerics")])
+    again = next(i for i in changed2 if i.channel == "numerics"
+                 and i.active)
+    assert again.recurrence_of == num.id
+
+
+def test_escalated_suppression_is_per_channel():
+    """An escalated perf signature suppresses fresh PERF incidents only;
+    the numerics channel keeps its own book."""
+    mgr = IncidentManager(fleet_size=W, confirm_windows=1)
+    mgr.on_trigger(_perf_trigger(0.0))
+    mgr.on_window(1.0, [_diag(LOSS_FN, Kind.PYTHON)])
+    inc = mgr.incidents[0]
+    inc.state = ESCALATED
+    inc.escalated_at = 1.5
+    mgr._suppressed[("perf", LOSS_FN)] = 0
+    mgr.on_trigger(_num_trigger(2.0))
+    mgr.on_window(3.0, [_diag(LOSS_FN, Kind.NUMERICS,
+                              channel="numerics")])
+    assert mgr.by_function(LOSS_FN, "numerics") is not None
+
+
+# -- plan shape ----------------------------------------------------------------
+
+def test_numerics_hint_and_rollback_ladder():
+    from repro.core.mitigation import plan_ladder
+    for fn, word in ((LOSS_FN, "loss"), (GRAD_FN, "gradient")):
+        d = _diag(fn, Kind.NUMERICS, channel="numerics")
+        assert word in d.hint and "roll back" in d.hint
+        ladder = plan_ladder(d, W)
+        assert [p.action for p in ladder] \
+            == [Action.ROLLBACK_TO_CHECKPOINT, Action.FLAG_CODE]
+
+
+# -- end-to-end: both channels under one roof ---------------------------------
+
+def test_loss_spike_under_open_perf_incident():
+    """Catalog scenario N4: a loss spike injected alongside a GPU
+    throttle.  Both channels trigger, both incidents resolve, each via
+    its own playbook — rollback never fires for the perf incident, hosts
+    are never replaced for the numerics one."""
+    from repro.online.catalog import by_name, evaluate, run_scenario
+    sc = by_name("N4_loss_spike_under_perf")
+    runner, res = run_scenario(sc)
+    rows = evaluate(sc, runner, res)
+    assert all(r["ok"] for r in rows)
+    by_ch = {r["channel"]: r for r in rows}
+    assert by_ch["perf"]["first_action"] == "replace_hosts"
+    assert by_ch["numerics"]["first_action"] == "rollback_to_checkpoint"
+    # cross-channel hygiene on the actual engine log
+    for m in runner.engine.log:
+        inc = next(i for i in res.incidents
+                   if i.id == m.incident_id)
+        if inc.channel == "numerics":
+            assert m.plan.action != Action.REPLACE_HOSTS
+        else:
+            assert m.plan.action != Action.ROLLBACK_TO_CHECKPOINT
+
+
+def test_nan_grad_norm_scenario_resolves():
+    """Catalog scenario N3: a NaN gradient norm fires immediately and the
+    rollback plan clears it."""
+    from repro.online.catalog import by_name, evaluate, run_scenario
+    sc = by_name("N3_grad_norm_nan")
+    runner, res = run_scenario(sc)
+    assert all(r["ok"] for r in evaluate(sc, runner, res))
+    inc = next(i for i in res.incidents if i.channel == "numerics")
+    assert inc.trigger is not None
+    assert "non-finite" in inc.trigger.detail
+    assert not math.isnan(inc.opened_at)
