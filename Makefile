@@ -1,8 +1,9 @@
 PY ?= python
 
-.PHONY: test test-wire test-train test-cov deps lint bench bench-summarize \
-        bench-fleet bench-online bench-wire bench-mitigation bench-tree \
-        bench-overhead bench-scenarios bench-gate bench-gate-update
+.PHONY: test test-wire test-train test-serve test-cov deps lint bench \
+        bench-summarize bench-fleet bench-online bench-wire \
+        bench-mitigation bench-tree bench-overhead bench-scenarios \
+        bench-serve bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -20,6 +21,11 @@ test-wire:
 # training loops, live fault scenarios, multi-process socket integration
 test-train:
 	PYTHONPATH=src $(PY) -m pytest -q -m train --timeout=600
+
+# real-serving workload tests only (the CI `serve` job): jit-compiled
+# decode loops + live latency-SLO fault scenarios (DESIGN.md §13)
+test-serve:
+	PYTHONPATH=src $(PY) -m pytest -q -m serve --timeout=600
 
 # the committed coverage floor: `make test-cov` fails if total line
 # coverage of src/repro drops below it.  Raise it when coverage improves;
@@ -71,10 +77,15 @@ bench-overhead:
 bench-scenarios:
 	PYTHONPATH=src:. $(PY) benchmarks/scenario_table.py
 
+# the serving latency-SLO matrix (ISSUE 9, DESIGN.md §13): the serve
+# fault class through the closed loop, per-expectation windows-to-resolve
+bench-serve:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only serve_slo
+
 # the CI benchmark-regression gate: run the gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,collector_tree,train_overhead,ability_matrix
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,serve_slo,collector_tree,train_overhead,ability_matrix
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

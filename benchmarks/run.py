@@ -23,6 +23,7 @@ MODULES = [
     ("online_pipeline", "ISSUE 3: online pipeline / differential escalation"),
     ("wire_transport", "ISSUE 4: wire transport throughput / p99 latency"),
     ("mitigation_loop", "ISSUE 5: mitigation loop windows-to-resolution"),
+    ("serve_slo", "ISSUE 9: serving latency-SLO matrix (serve fault class)"),
     ("collector_tree", "ISSUE 6: sharded collector tree vs flat at W=1024"),
     ("train_overhead", "ISSUE 7: tracer overhead on the real train loop"),
     ("kernels_bench", "kernel micro-bench"),

@@ -1,0 +1,72 @@
+"""ISSUE 9: the serving latency-SLO matrix — windows-to-resolution across
+the serve fault class (DESIGN.md §13).
+
+Runs the catalog's serving slice (``fault_class == 'serve'``) under the
+standard deployment shape with the mitigation loop closed: every SLO
+incident must open on the ``slo`` channel, localize to the declared
+serving function, and resolve through the serving playbook's ladder
+(``SHED_LOAD`` / ``DRAIN_AND_REPLACE``) with zero escalations.  Per
+scenario::
+
+    serve_slo/<scenario>,  max windows from plan application to resolved
+                           across the scenario's expectations,
+                           ok=Y/N;expectations=n;plans=<actions>
+
+plus an aggregate row::
+
+    serve_slo/matrix,  mean windows-to-resolution,
+                       ok=Y iff every expectation of every scenario met
+
+Everything is deterministic (seeded simulator, fixed schedule), so the
+CI gate pins a windows-to-resolution CEILING per scenario and the matrix
+``ok`` flag (benchmarks/baselines.json).
+
+Env knobs (CI smoke): ``REPRO_BENCH_SERVE_SCENARIOS`` (comma-separated
+scenario names, default the whole serve class).
+"""
+from __future__ import annotations
+
+import os
+
+
+def _scenarios():
+    from repro.online.catalog import SCENARIOS
+    serve = [s for s in SCENARIOS if s.fault_class == "serve"]
+    only = [c for c in os.environ.get("REPRO_BENCH_SERVE_SCENARIOS",
+                                      "").split(",") if c]
+    return [s for s in serve if not only or s.name in only]
+
+
+def run():
+    from repro.online.catalog import evaluate, run_scenario
+    rows = []
+    all_ok = True
+    resolutions = []
+    for sc in _scenarios():
+        runner, res = run_scenario(sc)
+        scored = evaluate(sc, runner, res)
+        sc_ok = all(bool(r["ok"]) for r in scored) and bool(scored)
+        wtrs = [r["wtr"] for r in scored if r["wtr"] is not None]
+        resolutions += wtrs if sc_ok else []
+        all_ok = all_ok and sc_ok
+        rows.append((
+            f"serve_slo/{sc.name}",
+            max(wtrs) if sc_ok and wtrs else float("nan"),
+            f"max_windows_to_resolve;ok={'Y' if sc_ok else 'N'};"
+            f"expectations={len(scored)};"
+            f"plans={'+'.join(r['first_action'] or 'none' for r in scored)}"))
+    mean_wtr = (sum(resolutions) / len(resolutions)
+                if resolutions else float("nan"))
+    # an empty scenario filter (a typo in REPRO_BENCH_SERVE_SCENARIOS)
+    # must not report a vacuous green matrix
+    all_ok = all_ok and bool(resolutions)
+    rows.append((
+        "serve_slo/matrix", mean_wtr,
+        f"mean_windows_to_resolve;ok={'Y' if all_ok else 'N'};"
+        f"expectations={len(resolutions)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

@@ -28,6 +28,13 @@ signature clear, and every incident is driven to ``resolved``.
 against its declared expectations — try ``E3_bad_standby_driver`` to
 watch ``replace_hosts`` land on a poisoned standby and the incident
 escalate honestly.  ``--list-scenarios`` prints the catalog.
+
+Serving scenarios (DESIGN.md §13) run the same way — try
+``--scenario SV2_arrival_burst`` to watch a latency-SLO incident open on
+the ``slo`` channel and resolve through ``shed_load``; for the loop over
+the REAL jax serving engine (live arrival-burst / decode-stall /
+KV-thrash faults), see ``tests/test_serve_workload.py`` and
+``repro/serve/workload.py``.
 """
 import argparse
 

@@ -17,7 +17,9 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core import channels
 
 DATALOADER_NEXT = "dataloader.next"
 OPTIMIZER_STEP = "optimizer.step"
@@ -25,13 +27,16 @@ OPTIMIZER_STEP = "optimizer.step"
 
 @dataclass(frozen=True)
 class Trigger:
-    reason: str               # 'slowdown' | 'blockage' | numerics reasons
+    reason: str               # 'slowdown' | 'blockage' | stream reasons
     time: float
-    mean_duration: float      # numerics channel: the offending sample value
+    mean_duration: float      # sample channels: the offending sample value
     baseline: float
     detail: str = ""
-    channel: str = "perf"     # 'perf' | 'numerics' — which detector stream
-    #                           fired; incidents keep the channels apart
+    channel: str = channels.PERF   # which detector stream fired; incidents
+    #                                keep the channels apart
+
+    def __post_init__(self):
+        channels.validate_channel(self.channel)
 
 
 @dataclass(frozen=True)
@@ -40,9 +45,12 @@ class Recovery:
     slowdown re-arm fires (recent mean back under threshold) or a blockage
     stall ends (anchor events flow again).  This is the signal the online
     incident pipeline resolves incidents on (DESIGN.md §7)."""
-    reason: str               # 'slowdown' | 'blockage' | numerics reasons
+    reason: str               # 'slowdown' | 'blockage' | stream reasons
     time: float
-    channel: str = "perf"
+    channel: str = channels.PERF
+
+    def __post_init__(self):
+        channels.validate_channel(self.channel)
 
 
 @dataclass
@@ -222,63 +230,53 @@ class IterationDetector:
         return self._slowdown_armed and self._blockage_armed
 
 
-# -- numerics channel (DESIGN.md §12a) ----------------------------------------
+# -- sample-stream channels (DESIGN.md §12a, §13) -----------------------------
 
-@dataclass
-class NumericsConfig:
-    warmup: int = 8           # healthy samples before a baseline exists
-    history: int = 256        # rolling healthy-sample window per signal
-    spike_ratio: float = 2.0  # loss > ratio x median(healthy) = abnormal
-    grad_ratio: float = 3.0   # grad_norm ratio (norms jitter more)
-    confirm: int = 2          # consecutive abnormal samples to trigger
-    recover: int = 2          # consecutive healthy samples to recover
+class _StreamDetector:
+    """Shared per-signal state machine for sample-stream detector
+    channels: values judged against a rolling healthy-median baseline,
+    one state machine per signal.
 
+    Subclasses declare ``signals`` (feed order), ``reasons`` (per-signal
+    trigger reason), ``channel`` (the registered detector channel stamped
+    on every Trigger/Recovery) and implement ``_ratio``.
 
-#: numerics signals in feed order; also the function-name suffixes the
-#: pipeline uses when it synthesizes numerics abnormalities
-NUMERICS_SIGNALS = ("loss", "grad_norm")
-
-_NUMERICS_REASON = {"loss": "loss_spike", "grad_norm": "grad_explosion"}
-
-
-class NumericsDetector:
-    """FLARE-style divergence channel: job-level (loss, grad_norm) samples
-    against a rolling healthy-median baseline, one state machine per
-    signal.
-
-    Mirrors ``IterationDetector``'s contract — ``feed`` returns Triggers,
+    Mirrors ``IterationDetector``'s contract — feeding returns Triggers,
     ``recoveries`` accumulates, ``healthy`` says nothing is outstanding —
-    so the incident pipeline treats both channels identically; Triggers
-    and Recoveries carry ``channel='numerics'``.
+    so the incident pipeline treats every channel identically.
 
-    Robustness rules:
+    Robustness rules (shared by all stream channels):
       * abnormal samples (and non-finite ones) NEVER fold into the
         baseline — a spike must not poison the median it is judged by;
       * a single abnormal sample recovers silently (``confirm=2``): loss
-        routinely jumps for one step on a hard batch;
+        routinely jumps for one step on a hard batch, and p99 latency
+        jumps for one chunk under a benign burst;
       * a NON-FINITE sample skips confirmation and fires immediately —
         there is no benign single-sample NaN.
     """
 
-    def __init__(self, cfg: Optional[NumericsConfig] = None):
-        self.cfg = cfg if cfg is not None else NumericsConfig()
+    signals: Tuple[str, ...] = ()
+    reasons: Dict[str, str] = {}
+    channel: str = channels.PERF
+
+    def __init__(self, cfg):
+        self.cfg = cfg
         self._hist = {s: deque(maxlen=self.cfg.history)
-                      for s in NUMERICS_SIGNALS}
-        self._bad_streak = {s: 0 for s in NUMERICS_SIGNALS}
-        self._ok_streak = {s: 0 for s in NUMERICS_SIGNALS}
-        self._outstanding = {s: False for s in NUMERICS_SIGNALS}
+                      for s in self.signals}
+        self._bad_streak = {s: 0 for s in self.signals}
+        self._ok_streak = {s: 0 for s in self.signals}
+        self._outstanding = {s: False for s in self.signals}
         self.triggers: List[Trigger] = []
         self.recoveries: List[Recovery] = []
 
     def _ratio(self, signal: str) -> float:
-        return (self.cfg.spike_ratio if signal == "loss"
-                else self.cfg.grad_ratio)
+        raise NotImplementedError
 
     def _feed_signal(self, signal: str, t: float, value: float
                      ) -> Optional[Trigger]:
         cfg = self.cfg
         hist = self._hist[signal]
-        reason = _NUMERICS_REASON[signal]
+        reason = self.reasons[signal]
         finite = value == value and abs(value) != float("inf")
         baseline = (sorted(hist)[len(hist) // 2]) if hist else 0.0
         if not finite:
@@ -298,7 +296,7 @@ class NumericsDetector:
                     self._outstanding[signal] = False
                     self._ok_streak[signal] = 0
                     self.recoveries.append(
-                        Recovery(reason, t, channel="numerics"))
+                        Recovery(reason, t, channel=self.channel))
             return None
 
         self._ok_streak[signal] = 0
@@ -313,16 +311,13 @@ class NumericsDetector:
             (f"{signal}={value!r} vs healthy median {baseline:.4g} "
              f"(x{self._ratio(signal):.1f} bound"
              + (", non-finite)" if not finite else ")")),
-            channel="numerics")
+            channel=self.channel)
         self.triggers.append(trig)
         return trig
 
-    def feed(self, t: float, loss: float, grad_norm: float
-             ) -> List[Trigger]:
-        """Feed one training step's (loss, grad_norm); returns any
-        triggers that fired (one per signal at most)."""
+    def _feed_samples(self, t: float, *values: float) -> List[Trigger]:
         out = []
-        for signal, value in zip(NUMERICS_SIGNALS, (loss, grad_norm)):
+        for signal, value in zip(self.signals, values):
             trig = self._feed_signal(signal, t, float(value))
             if trig is not None:
                 out.append(trig)
@@ -330,8 +325,99 @@ class NumericsDetector:
 
     def outstanding(self) -> List[str]:
         """Signals with a fired, not-yet-recovered trigger."""
-        return [s for s in NUMERICS_SIGNALS if self._outstanding[s]]
+        return [s for s in self.signals if self._outstanding[s]]
 
     @property
     def healthy(self) -> bool:
         return not any(self._outstanding.values())
+
+
+# -- numerics channel (DESIGN.md §12a) ----------------------------------------
+
+@dataclass
+class NumericsConfig:
+    warmup: int = 8           # healthy samples before a baseline exists
+    history: int = 256        # rolling healthy-sample window per signal
+    spike_ratio: float = 2.0  # loss > ratio x median(healthy) = abnormal
+    grad_ratio: float = 3.0   # grad_norm ratio (norms jitter more)
+    confirm: int = 2          # consecutive abnormal samples to trigger
+    recover: int = 2          # consecutive healthy samples to recover
+
+
+#: numerics signals in feed order; also the function-name suffixes the
+#: pipeline uses when it synthesizes numerics abnormalities
+NUMERICS_SIGNALS = ("loss", "grad_norm")
+
+_NUMERICS_REASON = {"loss": "loss_spike", "grad_norm": "grad_explosion"}
+
+
+class NumericsDetector(_StreamDetector):
+    """FLARE-style divergence channel: job-level (loss, grad_norm) samples
+    against a rolling healthy-median baseline (see ``_StreamDetector`` for
+    the shared state machine); Triggers and Recoveries carry
+    ``channel='numerics'``."""
+
+    signals = NUMERICS_SIGNALS
+    reasons = _NUMERICS_REASON
+    channel = channels.NUMERICS
+
+    def __init__(self, cfg: Optional[NumericsConfig] = None):
+        super().__init__(cfg if cfg is not None else NumericsConfig())
+
+    def _ratio(self, signal: str) -> float:
+        return (self.cfg.spike_ratio if signal == "loss"
+                else self.cfg.grad_ratio)
+
+    def feed(self, t: float, loss: float, grad_norm: float
+             ) -> List[Trigger]:
+        """Feed one training step's (loss, grad_norm); returns any
+        triggers that fired (one per signal at most)."""
+        return self._feed_samples(t, loss, grad_norm)
+
+
+# -- serving latency-SLO channel (DESIGN.md §13) ------------------------------
+
+@dataclass
+class SloConfig:
+    warmup: int = 8           # healthy samples before a baseline exists
+    history: int = 256        # rolling healthy-sample window per signal
+    ttft_ratio: float = 2.5   # p99 TTFT > ratio x median = violation
+    #                           (queueing amplifies tails; leave headroom)
+    tbt_ratio: float = 1.5    # p99 time-between-tokens ratio (decode is
+    #                           steady; a hot worker shows up fast)
+    confirm: int = 2          # consecutive violating samples to trigger
+    recover: int = 2          # consecutive healthy samples to recover
+
+
+#: SLO signals in feed order: p99 time-to-first-token, p99
+#: time-between-tokens — the two user-facing serving latencies
+SLO_SIGNALS = ("ttft", "tbt")
+
+_SLO_REASON = {"ttft": "ttft_violation", "tbt": "tbt_violation"}
+
+
+class SloDetector(_StreamDetector):
+    """Serving latency-SLO channel: per-chunk p99 (TTFT, TBT) samples
+    against a rolling healthy-median baseline calibrated from the run
+    itself (see ``_StreamDetector`` for the shared state machine);
+    Triggers and Recoveries carry ``channel='slo'``.
+
+    ``confirm=2`` is the burst tolerance: one bad p99 chunk from a benign
+    arrival burst recovers silently, a sustained violation fires.
+    """
+
+    signals = SLO_SIGNALS
+    reasons = _SLO_REASON
+    channel = channels.SLO
+
+    def __init__(self, cfg: Optional[SloConfig] = None):
+        super().__init__(cfg if cfg is not None else SloConfig())
+
+    def _ratio(self, signal: str) -> float:
+        return (self.cfg.ttft_ratio if signal == "ttft"
+                else self.cfg.tbt_ratio)
+
+    def feed(self, t: float, ttft: float, tbt: float) -> List[Trigger]:
+        """Feed one chunk's (p99 TTFT, p99 TBT); returns any triggers
+        that fired (one per signal at most)."""
+        return self._feed_samples(t, ttft, tbt)

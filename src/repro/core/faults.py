@@ -122,6 +122,26 @@ class DegradedNic(Fault):
     group_size: int = 8          # DP-group peers wait on the slow host
 
 
+# -- serving faults (DESIGN.md §13) -------------------------------------------
+
+@dataclass(frozen=True)
+class ArrivalBurst(Fault):
+    """Sustained request-arrival burst beyond the fleet's serving capacity:
+    every worker's admission queue backs up, TTFT explodes while decode
+    stays healthy.  Fleet-wide — no host replacement helps; the cure is
+    shedding load (reject/route the excess)."""
+    queue_mult: float = 20.0     # dequeue-wait stretch factor
+
+
+@dataclass(frozen=True)
+class KvCacheThrash(Fault):
+    """KV-cache working set exceeds device memory: block reads that should
+    hit cache go to fetch path, stretching every decode step (TBT) across
+    the fleet.  Fleet-wide — cured by shedding load until the working set
+    fits again."""
+    slowdown: float = 20.0       # kv block-read stretch factor
+
+
 # -- numerics faults (DESIGN.md §12a) -----------------------------------------
 
 @dataclass(frozen=True)
@@ -221,6 +241,10 @@ def default_cures() -> Dict[type, Tuple]:
             # numerics faults: only restoring a good checkpoint helps
             LossSpike: (Action.ROLLBACK_TO_CHECKPOINT,),
             GradExplosion: (Action.ROLLBACK_TO_CHECKPOINT,),
+            # serving faults: fleet-wide overload sheds load; host-pinned
+            # serve faults are declared per scenario (DRAIN_AND_REPLACE)
+            ArrivalBurst: (Action.SHED_LOAD,),
+            KvCacheThrash: (Action.SHED_LOAD,),
         }
     return _DEFAULT_CURES
 

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import channels
 from repro.core.events import Kind
 from repro.core.expectations import expected_box
 
@@ -38,10 +39,16 @@ class Abnormality:
     patterns: np.ndarray          # (n_abnormal, 3)
     typical: np.ndarray           # median pattern across fleet (3,)
     reason: str = ""              # 'expectation' | 'differential' | both
-    channel: str = "perf"         # detector channel ('perf' | 'numerics')
-    #                               — numerics abnormalities are synthesized
-    #                               from the numerics detector stream, not
-    #                               from profile patterns (DESIGN.md §12a)
+    channel: str = channels.PERF  # detector channel (a registered
+    #                               repro.core.channels name) — numerics
+    #                               abnormalities are synthesized from the
+    #                               numerics detector stream, not from
+    #                               profile patterns (DESIGN.md §12a); serve
+    #                               profiles are retagged 'slo' by the
+    #                               pipeline (§13)
+
+    def __post_init__(self):
+        channels.validate_channel(self.channel)
 
 
 class Localizer:

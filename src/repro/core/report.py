@@ -71,6 +71,13 @@ def root_cause_hint(a: Abnormality, fleet_size: int) -> str:
                     "link elsewhere in the ring (§3 Fig. 5b)")
         return "collective communication slower than peers"
     if a.kind == Kind.PYTHON:
+        if "queue" in a.function or "dequeue" in a.function:
+            if frac > 0.5:
+                return ("request dequeue wait dominates fleet-wide -> "
+                        "arrival rate exceeds serving capacity (queue "
+                        "buildup); shed load until the backlog drains")
+            return ("long dequeue waits on a subset of serving hosts -> "
+                    "local scheduler backlog; drain and investigate")
         if "socket" in a.function or "dataloader" in a.function:
             if mu < 0.3 and sigma > t_sigma * 1.5 and 0.0 < frac < 0.5:
                 return ("long, bursty, non-CPU-intensive dataloader frames "
@@ -94,6 +101,10 @@ def root_cause_hint(a: Abnormality, fleet_size: int) -> str:
                     "throttling; replace or re-image the hosts")
         return "Python function exceeds the 1% critical-path budget"
     if a.kind == Kind.MEM:
+        if "kv" in a.function:
+            return ("KV block reads dominate the decode step -> KV-cache "
+                    "working set exceeds device memory (cache thrash); "
+                    "shed load until the working set fits")
         return "memory operations dominate -> host/device copy bottleneck"
     return "abnormal behavior"
 

@@ -30,6 +30,13 @@ ALLGATHER = "AllGather_RING"
 H2D = "memcpy_h2d"
 OPT_STACK = "train.py:train_loop/optimizer.py:step"
 
+# serve-mode canonical names (DESIGN.md §13): one continuous-batched decode
+# iteration = dequeue wait -> decode GEMMs -> KV block fetch -> token sync
+SERVE_QUEUE_STACK = ("serve.py:serve_loop/scheduler.py:dequeue_wait")
+DECODE_GEMM = "CUDA_DECODE_GEMM_kernel"
+KV_FETCH = "kv_cache.py:read_block"
+TOKEN_SYNC = "AllGather_TOKEN"
+
 
 @dataclass
 class SimConfig:
@@ -46,6 +53,11 @@ class SimConfig:
     #: inactive and join the fleet when ``replace_hosts`` re-meshes onto
     #: them (DESIGN.md §9)
     n_standby: int = 0
+    #: 'train' (the historical behavior, byte-identical) or 'serve': a
+    #: continuous-batched inference fleet whose anchors are request
+    #: dequeue/complete pairs, whose profiles paint the serve iteration,
+    #: and whose job-level sample stream is ``slo_window`` (DESIGN.md §13)
+    workload: str = "train"
 
 
 class FleetSimulator:
@@ -126,6 +138,10 @@ class FleetSimulator:
                 m = max(m, 1 + 0.45 * (f.slowdown - 1))
             elif isinstance(f, F.DegradedNic):
                 m = max(m, 1 + 0.35 * (1 / f.rho - 1))
+            elif isinstance(f, F.ArrivalBurst):
+                m = max(m, 1 + 0.005 * f.queue_mult)
+            elif isinstance(f, F.KvCacheThrash):
+                m = max(m, 1 + 0.08 * f.slowdown)
             # numerics faults (LossSpike / GradExplosion) are deliberately
             # absent: they never slow an iteration (DESIGN.md §12a)
         return m
@@ -141,12 +157,19 @@ class FleetSimulator:
         out = []
         t = t0
         mult = self.iteration_multiplier()
+        # serve mode: the anchor pair is a request's dequeue->completion —
+        # same cadence and draw count, so injecting a serve fault can never
+        # shift any other stream.  (The iteration detector never locks on
+        # these names; serve detection rides the SLO channel instead.)
+        first, second = (("request.dequeue", "request.complete")
+                         if self.cfg.workload == "serve"
+                         else ("dataloader.next", "optimizer.step"))
         for i in range(n_iters):
             m = mult if degrade_after is None or i >= degrade_after else 1.0
             dur = self.cfg.iteration_s * m \
                 * (1 + 0.01 * self.rng.standard_normal())
-            out.append(("dataloader.next", t))
-            out.append(("optimizer.step", t + dur * 0.97))
+            out.append((first, t))
+            out.append((second, t + dur * 0.97))
             t += dur
         self.anchor_clock = t
         return out
@@ -232,6 +255,8 @@ class FleetSimulator:
         rate = cfg.rate_hz if rate_hz is None else float(rate_hz)
         rng = np.random.default_rng(
             (cfg.seed if seed is None else seed, w))
+        if cfg.workload == "serve":
+            return self._serve_worker_profile(w, rate, rng)
         n = int(cfg.window_s * rate)
         streams = {
             "gpu_sm": np.zeros(n),
@@ -374,6 +399,99 @@ class FleetSimulator:
             streams={k: SampleStream(rate, 0.0, v)
                      for k, v in streams.items()})
 
+    # -- serve-mode profile (DESIGN.md §13) --------------------------------
+    def _serve_worker_profile(self, w: int, rate: float,
+                              rng: np.random.Generator) -> WorkerProfile:
+        """One serving worker's raw window: a continuous-batched decode
+        iteration painted per the serve fault signatures.
+
+          1. dequeue wait  (PYTHON, low idle CPU; an ``ArrivalBurst``
+             stretches it fleet-wide — queue buildup);
+          2. decode GEMMs  (GPU; a pinned ``GpuThrottle`` stretches them at
+             low SM util — the hot-worker-slow-decode case);
+          3. KV block fetch (MEM; ``KvCacheThrash`` stretches it fleet-wide
+             at saturated memory bandwidth);
+          4. token sync    (COMM; a pinned ``DegradedNic`` collapses it to
+             rho at low, stable link utilization).
+
+        Healthy betas sit inside the dense-family expectation boxes, so a
+        healthy serving fleet localizes nothing — the same property the
+        train iteration has."""
+        cfg = self.cfg
+        n = int(cfg.window_s * rate)
+        streams = {
+            "gpu_sm": np.zeros(n),
+            "cpu": np.zeros(n),
+            "pcie_tx": np.zeros(n),
+            "membw": np.zeros(n),
+        }
+        events: List[FunctionEvent] = []
+
+        burst = self._fault(F.ArrivalBurst)
+        kv = self._fault(F.KvCacheThrash)
+        throttle = next((f for f in self._fault(F.GpuThrottle)
+                         if w in f.workers), None)
+        degnic = next((f for f in self._fault(F.DegradedNic)
+                       if w in f.workers), None)
+
+        def paint(stream: str, t0: float, t1: float, level: float,
+                  jitter: float = 0.03):
+            i0, i1 = int(t0 * rate), int(t1 * rate)
+            i0, i1 = max(0, i0), min(n, i1)
+            if i1 > i0:
+                streams[stream][i0:i1] = np.clip(
+                    level + rng.normal(0, jitter, i1 - i0), 0, 1)
+
+        t = 0.0
+        iter_s = cfg.iteration_s
+        n_gemms = cfg.n_fwd_gemms
+        while t < cfg.window_s:
+            # 1) dequeue wait: idle scheduler spin, low CPU either way —
+            # a burst makes it LONG, not busy
+            qd = 0.005 * iter_s * (burst[0].queue_mult if burst else 1.0)
+            events.append(FunctionEvent(SERVE_QUEUE_STACK, Kind.PYTHON,
+                                        t, t + qd, w, depth=3))
+            paint("cpu", t, t + qd, 0.12)
+            t += qd
+            # 2) decode GEMMs (continuous-batched step)
+            gpu_slow = throttle.slowdown if throttle else 1.0
+            gpu_util = throttle.util if throttle else 0.92
+            g = 0.45 * iter_s / n_gemms
+            for _ in range(n_gemms):
+                gd = g * gpu_slow
+                events.append(FunctionEvent(DECODE_GEMM, Kind.GPU,
+                                            t, t + gd, w))
+                paint("gpu_sm", t, t + gd, gpu_util)
+                t += gd
+            # 3) KV block fetch
+            md = 0.08 * iter_s * (kv[0].slowdown if kv else 1.0)
+            events.append(FunctionEvent(KV_FETCH, Kind.MEM, t, t + md, w))
+            if kv:
+                # working set blew past device memory: fetch path saturated
+                # and BURSTY
+                paint("membw", t, t + md, 0.95, jitter=0.1)
+            else:
+                paint("membw", t, t + md, 0.7)
+            t += md
+            # 4) token sync collective
+            cd = 0.1 * iter_s
+            if degnic:
+                cd *= 1.0 / degnic.rho
+            events.append(FunctionEvent(TOKEN_SYNC, Kind.COMM,
+                                        t, t + cd, w))
+            if degnic:
+                # degraded NIC: low, STABLE link utilization (§12c)
+                paint("pcie_tx", t, t + cd, 0.18, jitter=0.01)
+            else:
+                paint("pcie_tx", t, t + cd, 0.55)
+            t += cd
+
+        return WorkerProfile(
+            worker=w, window=(0.0, cfg.window_s),
+            events=[e for e in events if e.start < cfg.window_s],
+            streams={k: SampleStream(rate, 0.0, v)
+                     for k, v in streams.items()})
+
     # -- numerics channel (DESIGN.md §12a) ---------------------------------
     def numerics_window(self, n_iters: int, seed: int, t0: float,
                         t1: float) -> List[Tuple[float, float, float]]:
@@ -399,6 +517,51 @@ class FleetSimulator:
             if grad:
                 g = float("nan") if grad[0].nan else g * grad[0].magnitude
             samples.append((float(t), float(loss), float(g)))
+        return samples
+
+    # -- serving latency-SLO channel (DESIGN.md §13) -----------------------
+    def slo_window(self, n_iters: int, seed: int, t0: float,
+                   t1: float) -> List[Tuple[float, float, float]]:
+        """One window of job-level (t, p99_ttft, p99_tbt) samples.
+
+        Seeded from ``(seed, 1 << 22)`` (ring traces own ``1 << 20``, the
+        numerics lane ``1 << 21``) with exactly two draws per sample
+        REGARDLESS of active faults, so the stream is a pure function of
+        (seed, n_iters) and injecting or curing a serve fault cannot shift
+        any other stream.
+
+        Fault effects mirror how serving latency actually degrades: a
+        queue backlog explodes TTFT (requests wait to be admitted), while
+        hot decode / KV thrash / a degraded token-sync link stretch TBT.
+        A fault pinned to workers that all left the mesh (drained and
+        replaced) stops gating latency, like ``iteration_multiplier``."""
+        rng = np.random.default_rng((seed, 1 << 22))
+        in_mesh = set(self.active)
+
+        def gates(f) -> bool:
+            pinned = F.affected_workers(f)
+            return pinned is None or bool(pinned & in_mesh)
+
+        ttft_mult = 1.0
+        tbt_mult = 1.0
+        for f in self.faults:
+            if not gates(f):
+                continue
+            if isinstance(f, F.ArrivalBurst):
+                ttft_mult = max(ttft_mult, f.queue_mult)
+            elif isinstance(f, F.KvCacheThrash):
+                tbt_mult = max(tbt_mult, 1 + 0.1 * f.slowdown)
+            elif isinstance(f, F.GpuThrottle):
+                tbt_mult = max(tbt_mult, 1 + 0.75 * (f.slowdown - 1))
+            elif isinstance(f, F.DegradedNic):
+                tbt_mult = max(tbt_mult, 1 + 0.5 * (1 / f.rho - 1))
+        samples: List[Tuple[float, float, float]] = []
+        for i in range(n_iters):
+            t = t0 + (i + 1) * (t1 - t0) / max(1, n_iters)
+            ttft = 0.08 * (1 + 0.03 * rng.standard_normal())
+            tbt = 0.020 * (1 + 0.02 * rng.standard_normal())
+            samples.append((float(t), float(ttft * ttft_mult),
+                            float(tbt * tbt_mult)))
         return samples
 
     # -- pattern mode (scaling benchmarks) ---------------------------------

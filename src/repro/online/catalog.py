@@ -9,7 +9,7 @@ fault model + its pattern signature + a playbook rule, then DECLARING the
 scenario here.  ``tests/test_catalog.py`` enforces the invariant by
 grepping the diagnosis-path modules for scenario names.
 
-Four fault classes (the class is metadata for reporting, not dispatch):
+Five fault classes (the class is metadata for reporting, not dispatch):
 
   * ``perf``        — the six original paper cases (C1P1, C1P2, §3 ring,
     C2P1, C2P2, C2P3);
@@ -20,7 +20,12 @@ Four fault classes (the class is metadata for reporting, not dispatch):
   * ``environment`` — bad-host environments (driver/kernel mismatch,
     degraded NIC), including the BAD-STANDBY family: ``replace_hosts``
     lands on a poisoned standby, verification fails honestly, and the
-    incident must ESCALATE — a green "resolved" there would be a lie.
+    incident must ESCALATE — a green "resolved" there would be a lie;
+  * ``serve``       — latency-SLO violations under the simulator's serve
+    workload shape (DESIGN.md §13): the ``slo`` detector channel opens
+    the incident, localization runs over the serve profiles, and the
+    serving playbook (``repro.serve.playbook``) plans ``SHED_LOAD`` /
+    ``DRAIN_AND_REPLACE`` ladders.
 
 Every scenario runs under one standard deployment shape (``run_scenario``)
 with mitigation closed-loop; ``evaluate`` scores the outcome against the
@@ -34,10 +39,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import repro.serve.playbook  # noqa: F401  (registers the slo ladder rules)
 from repro.core import faults as F
 from repro.core.mitigation import Action
-from repro.core.simulation import (ALLGATHER, DATALOADER_STACK, FORWARD_STACK,
-                                   GC_STACK, GEMM, SimConfig)
+from repro.core.simulation import (ALLGATHER, DATALOADER_STACK, DECODE_GEMM,
+                                   FORWARD_STACK, GC_STACK, GEMM, KV_FETCH,
+                                   SERVE_QUEUE_STACK, SimConfig, TOKEN_SYNC)
 from repro.online.escalation import EscalationPolicy
 from repro.online.scenario import (ScenarioResult, ScenarioRunner,
                                    ScheduledFault)
@@ -56,7 +63,7 @@ N_WINDOWS = 12
 LOSS_FN = "numerics.loss"
 GRAD_FN = "numerics.grad_norm"
 
-FAULT_CLASSES = ("perf", "numerics", "host", "environment")
+FAULT_CLASSES = ("perf", "numerics", "host", "environment", "serve")
 
 
 @dataclass(frozen=True)
@@ -80,6 +87,9 @@ class Scenario:
     schedule: Tuple[ScheduledFault, ...]
     expect: Tuple[ExpectedIncident, ...]
     n_windows: int = N_WINDOWS
+    #: which simulator workload shape the scenario runs under ("train"
+    #: iterations or "serve" continuous-batched decode, DESIGN.md §13)
+    workload: str = "train"
 
 
 def _never_removed(fault: F.Fault, n_windows: int = N_WINDOWS,
@@ -191,6 +201,58 @@ SCENARIOS: Tuple[Scenario, ...] = (
         (ExpectedIncident(ALLGATHER, first_action=Action.REPLACE_HOSTS,
                           outcome="escalated"),),
         n_windows=14),
+
+    # -- serve: latency-SLO incidents under the serve workload shape -------
+    Scenario(
+        # one serving host's decode GPU throttled: p99 TBT blows the SLO,
+        # localization pins the decode GEMMs to that host, the serving
+        # playbook drains + replaces it
+        "SV1_hot_worker_decode", "serve",
+        (ScheduledFault(F.GpuThrottle(workers=(4,), slowdown=3.0),
+                        INJECT, N_WINDOWS,
+                        cures=(Action.DRAIN_AND_REPLACE,)),),
+        (ExpectedIncident(DECODE_GEMM, channel="slo",
+                          first_action=Action.DRAIN_AND_REPLACE),),
+        workload="serve"),
+    Scenario(
+        # sustained arrival burst: TTFT explodes fleet-wide while decode
+        # stays healthy; queue buildup is cured by shedding load, never by
+        # replacing hosts
+        "SV2_arrival_burst", "serve",
+        (_never_removed(F.ArrivalBurst()),),
+        (ExpectedIncident(SERVE_QUEUE_STACK, channel="slo",
+                          first_action=Action.SHED_LOAD),),
+        workload="serve"),
+    Scenario(
+        # KV working set exceeds device memory: every decode step's block
+        # reads go to the fetch path, TBT blows the SLO fleet-wide
+        "SV3_kv_cache_thrash", "serve",
+        (_never_removed(F.KvCacheThrash()),),
+        (ExpectedIncident(KV_FETCH, channel="slo",
+                          first_action=Action.SHED_LOAD),),
+        workload="serve"),
+    Scenario(
+        # degraded NIC on one serving host: its token-path collectives
+        # collapse, stretching time-between-tokens; drain + replace
+        "SV4_degraded_nic_serve", "serve",
+        (ScheduledFault(F.DegradedNic(workers=(9,)), INJECT, N_WINDOWS,
+                        cures=(Action.DRAIN_AND_REPLACE,)),),
+        (ExpectedIncident(TOKEN_SYNC, channel="slo",
+                          first_action=Action.DRAIN_AND_REPLACE),),
+        workload="serve"),
+    Scenario(
+        # an arrival burst lands while one host's decode GPU is already
+        # hot: two independent slo incidents, two different cures, both
+        # must resolve
+        "SV5_burst_under_hot_worker", "serve",
+        (ScheduledFault(F.GpuThrottle(workers=(4,), slowdown=3.0),
+                        INJECT, 14, cures=(Action.DRAIN_AND_REPLACE,)),
+         _never_removed(F.ArrivalBurst(), n_windows=14)),
+        (ExpectedIncident(DECODE_GEMM, channel="slo",
+                          first_action=Action.DRAIN_AND_REPLACE),
+         ExpectedIncident(SERVE_QUEUE_STACK, channel="slo",
+                          first_action=Action.SHED_LOAD)),
+        n_windows=14, workload="serve"),
 )
 
 
@@ -211,7 +273,7 @@ def run_scenario(sc: Scenario, verbose: bool = False
                            max_escalated=max(4, W // 16))
     runner = ScenarioRunner(
         SimConfig(n_workers=W, window_s=WINDOW_S, rate_hz=FULL_HZ,
-                  seed=SEED, n_standby=N_STANDBY),
+                  seed=SEED, n_standby=N_STANDBY, workload=sc.workload),
         list(sc.schedule), n_windows=sc.n_windows,
         escalation=esc, mitigation=True)
     return runner, runner.run(verbose=verbose)

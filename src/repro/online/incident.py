@@ -44,6 +44,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import channels
 from repro.core.detector import Recovery, Trigger
 from repro.core.localizer import Abnormality
 from repro.core.mitigation import MitigationPlan, plan_ladder
@@ -70,11 +71,12 @@ class Incident:
     opened_at: float
     trigger: Optional[Trigger]
     state: str = OPEN
-    #: detector channel this incident lives on ('perf' | 'numerics') —
-    #: part of the incident's identity alongside ``function``: a numerics
-    #: incident and a perf incident are distinct problems even when their
-    #: function names collide, and are never recurrence-linked
-    channel: str = "perf"
+    #: detector channel this incident lives on (a registered
+    #: ``repro.core.channels`` name) — part of the incident's identity
+    #: alongside ``function``: a numerics incident and a perf incident are
+    #: distinct problems even when their function names collide, and are
+    #: never recurrence-linked
+    channel: str = channels.PERF
     function: str = ""                  # set at confirmation
     kind: Optional[object] = None
     workers: Tuple[int, ...] = ()       # last implicated worker set
@@ -98,6 +100,9 @@ class Incident:
     windows_clear: int = 0
     #: (time, state) transition log
     history: List[Tuple[float, str]] = field(default_factory=list)
+
+    def __post_init__(self):
+        channels.validate_channel(self.channel)
 
     def _transition(self, state: str, t: float) -> None:
         self.state = state
@@ -165,7 +170,7 @@ class IncidentManager:
     def active(self) -> List[Incident]:
         return [i for i in self.incidents if i.active]
 
-    def by_function(self, function: str, channel: str = "perf"
+    def by_function(self, function: str, channel: str = channels.PERF
                     ) -> Optional[Incident]:
         for inc in self.incidents:
             if inc.active and inc.function == function \
@@ -173,7 +178,8 @@ class IncidentManager:
                 return inc
         return None
 
-    def _pending(self, channel: str = "perf") -> Optional[Incident]:
+    def _pending(self, channel: str = channels.PERF
+                 ) -> Optional[Incident]:
         """The unconfirmed OPEN incident holding the latest trigger on
         this channel."""
         for inc in self.incidents:
@@ -191,7 +197,7 @@ class IncidentManager:
         localization can, and does, below).  A numerics trigger during an
         open perf incident IS a new problem: the channels are independent
         sensors."""
-        channel = getattr(trig, "channel", "perf")
+        channel = channels.channel_of(trig)
         if any(i.channel == channel for i in self.active):
             return None
         inc = Incident(id=self._next_id, opened_at=trig.time, trigger=trig,
@@ -206,7 +212,7 @@ class IncidentManager:
         channel is healthy again.  Every active incident ON THAT CHANNEL
         whose signature is currently clear resolves; an unconfirmed OPEN
         incident (trigger never localized) resolves as transient."""
-        channel = getattr(rec, "channel", "perf")
+        channel = channels.channel_of(rec)
         resolved = []
         for inc in self.active:
             if inc.channel != channel:
@@ -236,7 +242,7 @@ class IncidentManager:
                 inc.windows_since_apply += 1
         for d in diagnoses:
             a: Abnormality = d.abnormality
-            ch = getattr(a, "channel", "perf")
+            ch = channels.channel_of(a)
             sig = (ch, a.function)
             seen_fns.add(sig)
             if sig in self._suppressed:

@@ -41,6 +41,12 @@ from repro.core.simulation import FleetSimulator
 #: module-level view keeps the engine's historical import path working
 DEFAULT_CURES: Dict[type, Tuple[Action, ...]] = F.default_cures()
 
+#: actions that drop hosts from the mesh and re-mesh onto standbys:
+#: training's checkpoint-now replace, and serving's drain-in-flight-then-
+#: replace (DESIGN.md §13) — identical world effect, different protocol
+#: around it, so the engine executes both through ``replace_hosts``
+_REPLACE_LIKE = (Action.REPLACE_HOSTS, Action.DRAIN_AND_REPLACE)
+
 
 @dataclass
 class AppliedMitigation:
@@ -147,7 +153,7 @@ class MitigationEngine:
         rec = AppliedMitigation(incident_id=incident_id, window=window,
                                 rung=rung, plan=plan)
         mapping: Dict[int, Optional[int]] = {}
-        if plan.action is Action.REPLACE_HOSTS and plan.workers:
+        if plan.action in _REPLACE_LIKE and plan.workers:
             mapping = self.sim.replace_hosts(plan.workers)
             rec.dropped = sorted(mapping)
             rec.replacements = sorted(
@@ -158,13 +164,13 @@ class MitigationEngine:
             fault = self._live[j]
             name = type(fault).__name__
             cures = self.cures(sf)
-            if plan.action is Action.REPLACE_HOSTS:
+            if plan.action in _REPLACE_LIKE:
                 if not mapping:
                     continue
                 pinned = F.affected_workers(fault)
                 if pinned is None or not (pinned & set(mapping)):
                     continue          # replacement can't touch this fault
-                if Action.REPLACE_HOSTS in cures:
+                if set(cures) & set(_REPLACE_LIKE):
                     # host-pinned fault: replacements are healthy, the
                     # fault shrinks off the dropped hosts (to nothing =
                     # cured, e.g. the degraded NIC bond leaving the ring)

@@ -20,8 +20,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import channels
 from repro.core.detector import (DetectorConfig, NumericsConfig,
-                                 NumericsDetector, Trigger)
+                                 NumericsDetector, SloConfig, SloDetector,
+                                 Trigger)
 from repro.core.events import Kind
 from repro.core.localizer import Abnormality
 from repro.core.report import (Diagnosis, build_report, format_report,
@@ -72,7 +74,9 @@ class OnlinePipeline:
                  escalation: Optional[EscalationPolicy] = None,
                  clear_windows: int = 2, verify_windows: int = 2,
                  max_escalations: int = 2, settle_windows: int = 1,
-                 numerics_cfg: Optional[NumericsConfig] = None):
+                 numerics_cfg: Optional[NumericsConfig] = None,
+                 slo_cfg: Optional[SloConfig] = None,
+                 profile_channel: str = channels.PERF):
         self.n_workers = int(n_workers)
         self.service = PerfTrackerService(
             family=family, detector_cfg=detector_cfg,
@@ -81,6 +85,15 @@ class OnlinePipeline:
         #: job-level numerics channel (DESIGN.md §12a): loss / grad-norm
         #: samples stream in via ``feed_numerics`` beside the anchor stream
         self.numerics = NumericsDetector(numerics_cfg)
+        #: serving latency-SLO channel (DESIGN.md §13): p99 (TTFT, TBT)
+        #: samples stream in via ``feed_slo``
+        self.slo = SloDetector(slo_cfg)
+        #: the channel localized PROFILE abnormalities belong to — ``perf``
+        #: for training workloads, ``slo`` for serving ones, where a slow
+        #: function manifests to users as a latency violation, not an
+        #: iteration slowdown (the anchor detector has no train sequence
+        #: to lock onto there)
+        self.profile_channel = channels.validate_channel(profile_channel)
         self.ema = EmaPatternAggregator(self.n_workers, alpha=alpha)
         self.incidents = IncidentManager(self.n_workers,
                                          clear_windows=clear_windows,
@@ -97,6 +110,7 @@ class OnlinePipeline:
         self.windows: List[WindowReport] = []
         self._recoveries_seen = 0
         self._num_recoveries_seen = 0
+        self._slo_recoveries_seen = 0
 
     def attach_mitigator(self, engine) -> None:
         """Install a ``repro.online.mitigation.MitigationEngine``: every
@@ -152,6 +166,51 @@ class OnlinePipeline:
         for rec in recs[self._num_recoveries_seen:]:
             self.incidents.on_recovery(rec)
         self._num_recoveries_seen = len(recs)
+        return triggers
+
+    def feed_slo(self, samples: Sequence[Tuple[float, float, float]]
+                 ) -> List[Trigger]:
+        """Stream job-level (t, p99_ttft, p99_tbt) samples into the SLO
+        channel (DESIGN.md §13).  Triggers and recoveries fold into the
+        same incident set on the ``channel='slo'`` lane.
+
+        When the workload's profile abnormalities live on the SLO channel
+        (``profile_channel='slo'``, a serving fleet), an SLO recovery
+        plays the role a perf recovery plays for training: the user-facing
+        metric is healthy again, so the EMA drains and stale fault
+        evidence stops implicating already-mitigated workers."""
+        triggers = []
+        for t, ttft, tbt in samples:
+            for trig in self.slo.feed(t, ttft, tbt):
+                triggers.append(trig)
+                self.incidents.on_trigger(trig)
+        recs = self.slo.recoveries
+        fresh = recs[self._slo_recoveries_seen:]
+        for rec in fresh:
+            self.incidents.on_recovery(rec)
+        self._slo_recoveries_seen = len(recs)
+        if fresh and self.profile_channel == channels.SLO:
+            self.ema = EmaPatternAggregator(self.n_workers,
+                                            alpha=self.ema.alpha)
+        return triggers
+
+    def feed_metrics(self, metrics: Dict[str, Sequence[Tuple[float, ...]]]
+                     ) -> List[Trigger]:
+        """Dispatch a ``WindowData.metrics`` dict to the matching
+        sample-stream detectors.  Stream names are validated against the
+        channel registry; a stream with no sample-feed (``perf`` rides the
+        anchor stream, not a metrics stream) raises."""
+        triggers: List[Trigger] = []
+        for name, samples in metrics.items():
+            channels.validate_channel(name)
+            if name == channels.NUMERICS:
+                triggers.extend(self.feed_numerics(samples))
+            elif name == channels.SLO:
+                triggers.extend(self.feed_slo(samples))
+            else:
+                raise ValueError(
+                    f"channel {name!r} has no metrics-stream detector; "
+                    "perf consumes the anchor stream via feed_anchors")
         return triggers
 
     def poll_blockage(self, now: float) -> Optional[Trigger]:
@@ -257,6 +316,12 @@ class OnlinePipeline:
             self.set_membership(self.mitigator.sim.active_workers)
         abn: List[Abnormality] = self.service.localizer.localize(
             pats, kinds, present=self._members)
+        if self.profile_channel != channels.PERF:
+            # serving fleet: a localized profile abnormality IS the SLO
+            # violation's root cause — retag it onto the workload's channel
+            # so it pairs with the SLO trigger's incident lane (§13)
+            for a in abn:
+                a.channel = self.profile_channel
         # outstanding numerics signals ride the same diagnosis path as a
         # synthesized job-level abnormality: no worker set (the channel is
         # job-level), kind NUMERICS, full-box expectation — everything
@@ -275,7 +340,8 @@ class OnlinePipeline:
         changed = self.incidents.on_window(
             t, diagnoses,
             detector_healthy=(self.detector.healthy
-                              and self.numerics.healthy))
+                              and self.numerics.healthy
+                              and self.slo.healthy))
         mitigations = []
         if self.mitigator is not None:
             mitigations = self.mitigator.step(self.incidents, t=t,

@@ -169,7 +169,8 @@ class ScenarioRunner:
             escalation=escalation, clear_windows=clear_windows,
             verify_windows=verify_windows,
             max_escalations=max_escalations,
-            settle_windows=settle_windows)
+            settle_windows=settle_windows,
+            profile_channel=self.workload.channel)
         #: ``mitigation=True`` closes the loop (DESIGN.md §9): incidents'
         #: ladder rungs execute against the simulator each tick, and the
         #: schedule's live fault view follows cures/re-meshes
@@ -195,7 +196,7 @@ class ScenarioRunner:
             wd = self.workload.run_window(i, faults,
                                           self.iters_per_window, rates)
             self.pipeline.feed_anchors(wd.anchors)
-            self.pipeline.feed_numerics(wd.numerics)
+            self.pipeline.feed_metrics(wd.metrics)
             self.pipeline.poll_blockage(wd.clock)
             # profiles come from the ACTIVE fleet only; with standbys
             # and/or after a re-mesh the absent rows are present-masked
@@ -348,13 +349,19 @@ class ScenarioRunner:
                 anchors = self.sim.anchor_events(self.iters_per_window,
                                                  t0=t0)
                 self.pipeline.feed_anchors(anchors)
-                # the numerics stream is job-level and deterministic per
-                # (seed, window) — the parent generates it itself, same as
-                # the anchor stream (children never ship it for sims)
-                self.pipeline.feed_numerics(self.sim.numerics_window(
-                    self.iters_per_window,
-                    self.sim_cfg.seed + _WINDOW_SEED_STRIDE * (i + 1),
-                    t0, self.sim.anchor_clock))
+                # the sample streams (numerics / slo) are job-level and
+                # deterministic per (seed, window) — the parent generates
+                # them itself, same as the anchor stream (children never
+                # ship them for sims)
+                wseed = self.sim_cfg.seed + _WINDOW_SEED_STRIDE * (i + 1)
+                if self.sim_cfg.workload == "serve":
+                    self.pipeline.feed_slo(self.sim.slo_window(
+                        self.iters_per_window, wseed, t0,
+                        self.sim.anchor_clock))
+                else:
+                    self.pipeline.feed_numerics(self.sim.numerics_window(
+                        self.iters_per_window, wseed, t0,
+                        self.sim.anchor_clock))
                 self.pipeline.poll_blockage(self.sim.anchor_clock)
                 rates = self.pipeline.rates()
                 active = [int(w) for w in self.sim.active_workers]

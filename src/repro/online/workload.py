@@ -25,10 +25,11 @@ from __future__ import annotations
 
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import channels
 from repro.core.events import WorkerProfile
 
 #: fraction of the iteration at which the optimizer.step anchor lands
@@ -45,9 +46,18 @@ class WindowData:
     workers: np.ndarray                  # active (mesh-member) worker ids
     clock: float                         # workload clock at window end
     t0: float                            # workload clock at window start
-    #: job-level (t, loss, grad_norm) samples for the numerics channel
-    #: (DESIGN.md §12a); empty when the workload has no numerics stream
-    numerics: List[Tuple[float, float, float]] = field(default_factory=list)
+    #: named job-level sample streams, stream -> [(t, *values), ...]:
+    #: ``"numerics"`` carries (t, loss, grad_norm) for the numerics channel
+    #: (DESIGN.md §12a), ``"slo"`` carries (t, p99_ttft, p99_tbt) for the
+    #: serving latency channel (§13); empty dict when the workload has no
+    #: sample streams
+    metrics: Dict[str, List[Tuple[float, ...]]] = field(default_factory=dict)
+
+    @property
+    def numerics(self) -> List[Tuple[float, float, float]]:
+        """Deprecation shim for the pre-§13 ``numerics`` field: the
+        numerics stream of ``metrics`` (empty list when absent)."""
+        return self.metrics.get(channels.NUMERICS, [])
 
 
 class WorkloadSource(ABC):
@@ -66,6 +76,14 @@ class WorkloadSource(ABC):
     @property
     def family(self) -> str:
         return "dense"
+
+    @property
+    def channel(self) -> str:
+        """The detector channel this workload's profile abnormalities
+        belong to: ``perf`` for training workloads (iteration slowdown),
+        ``slo`` for serving ones (latency violations).  The pipeline uses
+        it to retag localized profile abnormalities (DESIGN.md §13)."""
+        return channels.PERF
 
     @abstractmethod
     def run_window(self, window: int, faults: Sequence, iters: int,
@@ -156,6 +174,11 @@ class SimWorkload(WorkloadSource):
     def family(self) -> str:
         return self.sim.cfg.family
 
+    @property
+    def channel(self) -> str:
+        return (channels.SLO if self.sim.cfg.workload == "serve"
+                else channels.PERF)
+
     def seed_of(self, window: int) -> int:
         return self._seed + self._stride * (window + 1)
 
@@ -166,9 +189,13 @@ class SimWorkload(WorkloadSource):
         anchors = self.sim.anchor_events(iters, t0=t0)
         profiles = self.sim.profile_window(rates=rates,
                                            seed=self.seed_of(window))
-        numerics = self.sim.numerics_window(iters, self.seed_of(window),
-                                            t0, self.sim.anchor_clock)
+        if self.sim.cfg.workload == "serve":
+            metrics = {channels.SLO: self.sim.slo_window(
+                iters, self.seed_of(window), t0, self.sim.anchor_clock)}
+        else:
+            metrics = {channels.NUMERICS: self.sim.numerics_window(
+                iters, self.seed_of(window), t0, self.sim.anchor_clock)}
         return WindowData(anchors=anchors, profiles=profiles,
                           workers=self.sim.active_workers,
                           clock=self.sim.anchor_clock, t0=t0,
-                          numerics=numerics)
+                          metrics=metrics)

@@ -1,1 +1,18 @@
-from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+"""Serving engine package.
+
+``Engine``/``ServeConfig`` (the real jax serving engine) are exposed
+lazily (PEP 562) so that importing :mod:`repro.serve.playbook` — pure
+ladder rules the mitigation registry needs — never pulls in jax.
+"""
+from __future__ import annotations
+
+_ENGINE_EXPORTS = ("Engine", "ServeConfig")
+
+__all__ = list(_ENGINE_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _ENGINE_EXPORTS:
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -289,8 +289,8 @@ class TrainerWorkload(WorkloadSource):
         anchors, self._clock = synth_anchor_events(merged, t0)
         return WindowData(anchors=anchors, profiles=profiles,
                           workers=np.arange(self.n), clock=self._clock,
-                          t0=t0,
-                          numerics=merge_numerics(per_num, merged, t0))
+                          t0=t0, metrics={"numerics": merge_numerics(
+                              per_num, merged, t0)})
 
     def close(self) -> None:
         for tw in self.workers:

@@ -4,8 +4,8 @@
     meets its declared expectations (resolved with the right first plan
     and zero escalations, or — for the bad-standby family — honestly
     escalated);
-  * the catalog is big enough: >= 15 scenarios spanning all four fault
-    classes;
+  * the catalog is big enough: >= 21 scenarios spanning all five fault
+    classes (ISSUE 9 adds the serving/SLO class);
   * the diagnosis path stays scenario-agnostic: no scenario name appears
     in any detector/localizer/report/planner/incident module — adding a
     scenario is adding DATA, never a special case.
@@ -21,6 +21,7 @@ REPO = Path(__file__).resolve().parents[1]
 
 #: the diagnosis path: everything between raw profiles and executed plans
 DIAGNOSIS_PATH = [
+    "src/repro/core/channels.py",
     "src/repro/core/detector.py",
     "src/repro/core/localizer.py",
     "src/repro/core/expectations.py",
@@ -29,6 +30,7 @@ DIAGNOSIS_PATH = [
     "src/repro/online/pipeline.py",
     "src/repro/online/incident.py",
     "src/repro/online/mitigation.py",
+    "src/repro/serve/playbook.py",
 ]
 
 
@@ -52,7 +54,7 @@ def test_scenario_meets_expectations(sc):
 # -- catalog shape ------------------------------------------------------------
 
 def test_catalog_size_and_class_coverage():
-    assert len(SCENARIOS) >= 15
+    assert len(SCENARIOS) >= 21
     by_class = {c: [s for s in SCENARIOS if s.fault_class == c]
                 for c in FAULT_CLASSES}
     assert set(by_class) == set(FAULT_CLASSES)
@@ -60,6 +62,12 @@ def test_catalog_size_and_class_coverage():
     assert len(by_class["numerics"]) >= 3
     assert len(by_class["host"]) >= 2
     assert len(by_class["environment"]) >= 3
+    assert len(by_class["serve"]) >= 4           # the ISSUE 9 SLO family
+    # the serving scenarios run the serve workload and expect slo-channel
+    # incidents — the loop itself is shared (no per-class code paths)
+    for s in by_class["serve"]:
+        assert s.workload == "serve"
+        assert all(e.channel == "slo" for e in s.expect)
     # every scenario's class is declared, names are unique
     assert all(s.fault_class in FAULT_CLASSES for s in SCENARIOS)
     assert len({s.name for s in SCENARIOS}) == len(SCENARIOS)

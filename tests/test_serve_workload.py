@@ -1,0 +1,145 @@
+"""ISSUE 9: the EROICA loop over the REAL serving engine (DESIGN.md §13).
+
+Three layers of coverage:
+
+  * the instrumented serving worker itself — real jit'd decode under the
+    seeded Poisson generator, tracer frames present (dequeue wait PYTHON,
+    fenced decode GPU span, cpu-only stream set), dequeue/complete anchor
+    pairs and the ``slo`` metrics stream in every ``WindowData``;
+  * in-process ``ServeWorkload`` scenarios — each live fault (arrival
+    burst / decode stall / cache thrash) detected on the slo channel and
+    localized to the right function on the right workers, with the
+    serving-playbook plan on the ladder;
+  * fleet/wire byte-parity of the diagnosis over real serving profiles.
+"""
+import numpy as np
+import pytest
+
+from repro.core.mitigation import Action
+from repro.core.service import PerfTrackerService
+from repro.online import ScenarioRunner, ScheduledFault
+from repro.serve.workload import (BurstArrivals, CacheThrash, DecodeStall,
+                                  DECODE_STEP, KV_READ, QUEUE_WAIT,
+                                  RequestGen, ServeWorkload)
+from repro.train.workload import default_trainer_detector_cfg
+
+pytestmark = pytest.mark.serve
+
+IPW = 8                       # requests per profiling window
+N_WIN = 7                     # fault active for windows [2, 7)
+
+
+@pytest.fixture(scope="module")
+def wl4():
+    wl = ServeWorkload(n_workers=4)
+    wl._ensure_workers()
+    yield wl
+    wl.close()
+
+
+def _scenario(wl, fault):
+    return ScenarioRunner(
+        None, [ScheduledFault(fault, 2, N_WIN)], n_windows=N_WIN,
+        iters_per_window=IPW,
+        detector_cfg=default_trainer_detector_cfg(IPW), workload=wl)
+
+
+def _incident(result, functions, workers, action=None, channel="slo"):
+    """The slo-channel incident localizing ``functions`` that implicates
+    every worker in ``workers`` (and, when given, whose plan ladder holds
+    ``action``).  Extra noise incidents are tolerated — the scenario's
+    contract is that the GENUINE one exists."""
+    fns = {functions} if isinstance(functions, str) else set(functions)
+    for inc in result.incidents:
+        if inc.function in fns and inc.channel == channel \
+                and set(workers) <= set(inc.workers) \
+                and (action is None
+                     or action in [p.action for p in inc.plans]):
+            return inc
+    raise AssertionError(
+        f"no {channel} incident for {sorted(fns)} on {workers} with "
+        f"{action}; got "
+        f"{[(i.function, i.channel, i.workers, [p.action for p in i.plans]) for i in result.incidents]}")
+
+
+# -- the request generator ----------------------------------------------------
+
+def test_request_gen_deterministic_and_stable_below_capacity():
+    a = RequestGen(rate_rps=10.0, seed=3)
+    b = RequestGen(rate_rps=10.0, seed=3)
+    da = [a.delay(0.03) for _ in range(50)]
+    assert da == [b.delay(0.03) for _ in range(50)]
+    # utilization 0.3: delays stay bounded near zero
+    assert np.median(da) < 0.03
+
+
+def test_request_gen_burst_builds_backlog_then_caps():
+    gen = RequestGen(rate_rps=10.0, seed=3, max_delay_s=1.0)
+    healthy = [gen.delay(0.03) for _ in range(30)]
+    gen.burst_mult = 8.0                 # utilization 2.4: queue builds
+    burst = [gen.delay(0.03) for _ in range(60)]
+    assert max(burst) > 10 * max(max(healthy), 0.01)
+    assert max(burst) <= 1.0             # capped, not unbounded
+    # backlog GROWS request over request (queue buildup, not jitter)
+    assert np.mean(burst[30:]) > np.mean(burst[:30])
+
+
+# -- the instrumented real serving worker -------------------------------------
+
+def test_serve_window_structure(wl4):
+    wd = wl4.run_window(0, [], 3, None)
+    # anchors: one (dequeue, complete) pair per merged request
+    names = [n for n, _ in wd.anchors]
+    assert names == ["request.dequeue", "request.complete"] * 3
+    ts = [t for _, t in wd.anchors]
+    assert all(a < b + 1e-9 for a, b in zip(ts, ts[1:]))
+    # profiles: one per worker, real cpu sampler only, serving frames
+    assert len(wd.profiles) == 4
+    for prof in wd.profiles:
+        assert set(prof.streams) == {"cpu"}
+        top = [e.name for e in prof.events if e.depth == 1]
+        assert top.count(QUEUE_WAIT) == 3
+        assert top.count(DECODE_STEP) >= 3
+    # slo metrics stream: one (t, p99_ttft, p99_tbt) sample per request,
+    # timestamps on the same job clock as the anchors
+    slo = wd.metrics["slo"]
+    assert len(slo) == 3
+    assert all(wd.t0 <= t <= wd.clock + 1e-9 for t, _, _ in slo)
+    assert all(ttft > 0 and tbt > 0 for _, ttft, tbt in slo)
+    # the deprecation shim: serving windows carry no numerics stream
+    assert wd.numerics == []
+
+
+# -- in-process fault scenarios (the slo channel end-to-end) ------------------
+
+def test_burst_arrivals_localizes_queue_and_sheds_load(wl4):
+    res = _scenario(wl4, BurstArrivals(workers=())).run()
+    inc = _incident(res, QUEUE_WAIT, (0, 1, 2, 3), Action.SHED_LOAD)
+    assert inc.plans[0].action == Action.SHED_LOAD
+
+
+def test_decode_stall_localizes_subset_and_drains(wl4):
+    res = _scenario(wl4, DecodeStall(workers=(2,))).run()
+    inc = _incident(res, DECODE_STEP, (2,), Action.DRAIN_AND_REPLACE)
+    assert inc.plans[0].action == Action.DRAIN_AND_REPLACE
+
+
+def test_cache_thrash_localizes_kv_reads_fleet_wide(wl4):
+    res = _scenario(wl4, CacheThrash(workers=())).run()
+    inc = _incident(res, KV_READ, (0, 1, 2, 3), Action.SHED_LOAD)
+    assert inc.plans[0].action == Action.SHED_LOAD
+
+
+# -- fleet/wire parity on real serving profiles -------------------------------
+
+def test_fleet_wire_parity_on_serve_profiles(wl4):
+    wd = wl4.run_window(0, [CacheThrash(workers=())], IPW, None)
+    svc = PerfTrackerService(family="host", summarize_backend="numpy")
+    fleet = svc.diagnose_profiles(wd.profiles, mode="fleet")
+    assert KV_READ in fleet.functions()
+    wire = svc.diagnose_profiles(wd.profiles, mode="wire")
+    assert fleet.functions() == wire.functions()
+    for a, b in zip((d.abnormality for d in fleet.diagnoses),
+                    (d.abnormality for d in wire.diagnoses)):
+        np.testing.assert_array_equal(a.workers, b.workers)
+        np.testing.assert_array_equal(a.patterns, b.patterns)

@@ -1,0 +1,212 @@
+"""ISSUE 9: the serving latency-SLO channel (DESIGN.md §13).
+
+Three layers of coverage:
+
+  * the ``SloDetector`` state machines — warmup, single-burst
+    forgiveness, confirm/recover hysteresis, immediate non-finite firing,
+    per-signal ratios, and the no-baseline-poisoning rule (all shared
+    with the numerics channel through ``_StreamDetector``);
+  * the channel registry — unknown channels raise loudly instead of
+    coercing to ``perf`` (the getattr-default bug this PR removes);
+  * the serve plan ladders — registered under ``(slo, Kind)`` keys by
+    ``repro.serve.playbook``; the (None, kind) training defaults are
+    untouched (registry regression).
+"""
+import numpy as np
+import pytest
+
+import repro.serve.playbook  # noqa: F401  (registers the slo ladders)
+from repro.core import channels
+from repro.core.detector import (Recovery, SloConfig, SloDetector, Trigger)
+from repro.core.events import Kind
+from repro.core.localizer import Abnormality
+from repro.core.mitigation import Action, plan_ladder
+from repro.core.report import Diagnosis, root_cause_hint
+from repro.serve.workload import DECODE_STEP, KV_READ, QUEUE_WAIT
+
+W = 24
+BASE_TTFT = 0.050
+BASE_TBT = 0.010
+
+
+def warmed(ttft=BASE_TTFT, tbt=BASE_TBT, n=16, cfg=None):
+    """A detector past warmup with a stable healthy baseline."""
+    det = SloDetector(cfg)
+    for i in range(n):
+        assert det.feed(float(i), ttft, tbt) == []
+    return det
+
+
+# -- SloDetector state machines -----------------------------------------------
+
+def test_warmup_suppresses_triggers():
+    det = SloDetector()
+    # wild tails during warmup are baseline-building, not violations
+    for i in range(det.cfg.warmup - 1):
+        assert det.feed(float(i), 0.05 * 3 ** i, 0.01 * 2 ** i) == []
+    assert det.healthy
+
+
+def test_single_burst_recovers_silently():
+    """One bad p99 chunk from a benign arrival burst must neither
+    trigger nor emit a recovery (confirm=2 is the burst tolerance)."""
+    det = warmed()
+    assert det.feed(16.0, BASE_TTFT * 10, BASE_TBT) == []  # unconfirmed
+    assert det.feed(17.0, BASE_TTFT, BASE_TBT) == []       # burst passed
+    assert det.triggers == [] and det.recoveries == []
+    assert det.healthy and det.outstanding() == []
+
+
+def test_sustained_ttft_violation_triggers_then_recovers():
+    det = warmed()
+    assert det.feed(16.0, BASE_TTFT * 10, BASE_TBT) == []
+    trigs = det.feed(17.0, BASE_TTFT * 10, BASE_TBT)  # second consecutive
+    assert len(trigs) == 1
+    t = trigs[0]
+    assert isinstance(t, Trigger)
+    assert t.reason == "ttft_violation" and t.channel == channels.SLO
+    assert t.mean_duration == pytest.approx(BASE_TTFT * 10)
+    assert t.baseline == pytest.approx(BASE_TTFT)
+    assert not det.healthy and det.outstanding() == ["ttft"]
+    # further violations stay silent (one trigger per episode)
+    assert det.feed(18.0, BASE_TTFT * 12, BASE_TBT) == []
+    # recovery needs `recover` consecutive healthy chunks (hysteresis)
+    assert det.feed(19.0, BASE_TTFT, BASE_TBT) == []
+    assert det.recoveries == []
+    assert det.feed(20.0, BASE_TTFT, BASE_TBT) == []
+    assert [r.reason for r in det.recoveries] == ["ttft_violation"]
+    assert isinstance(det.recoveries[0], Recovery)
+    assert det.recoveries[0].channel == channels.SLO
+    assert det.healthy
+
+
+def test_rearm_fires_again_after_recovery():
+    """A recovered signal re-arms: a second sustained violation opens a
+    second episode with its own trigger."""
+    det = warmed()
+    for t in (16.0, 17.0):
+        det.feed(t, BASE_TTFT * 10, BASE_TBT)
+    for t in (18.0, 19.0):
+        det.feed(t, BASE_TTFT, BASE_TBT)
+    assert det.healthy and len(det.triggers) == 1
+    for t in (20.0, 21.0):
+        det.feed(t, BASE_TTFT * 10, BASE_TBT)
+    assert [t.reason for t in det.triggers] == ["ttft_violation"] * 2
+    assert not det.healthy
+
+
+def test_tbt_uses_tighter_ratio():
+    """Decode is steady: the TBT bound (1.5x) is tighter than TTFT's
+    (2.5x), so a 2x tail stretch is a TBT violation but TTFT jitter."""
+    cfg = SloConfig()
+    det = warmed()
+    trigs = []
+    for i in range(2):
+        trigs += det.feed(16.0 + i, BASE_TTFT * 2.0, BASE_TBT * 2.0)
+    assert [t.reason for t in trigs] == ["tbt_violation"]
+    assert cfg.tbt_ratio < 2.0 < cfg.ttft_ratio
+
+
+def test_non_finite_fires_immediately_even_in_warmup():
+    """There is no benign single-sample NaN: confirmation is skipped."""
+    det = SloDetector()
+    trigs = det.feed(0.0, float("nan"), BASE_TBT)
+    assert [t.reason for t in trigs] == ["ttft_violation"]
+    assert "non-finite" in trigs[0].detail
+    det2 = warmed()
+    trigs2 = det2.feed(16.0, BASE_TTFT, float("inf"))
+    assert [t.reason for t in trigs2] == ["tbt_violation"]
+
+
+def test_violations_never_poison_baseline():
+    """A long violation episode must not fold into the median it is
+    judged by: the ORIGINAL baseline still judges recovery."""
+    det = warmed()
+    for i in range(40):
+        det.feed(16.0 + i, BASE_TTFT * 10, BASE_TBT)
+    assert not det.healthy
+    assert all(v == pytest.approx(BASE_TTFT) for v in det._hist["ttft"])
+    # healthy-at-the-old-baseline chunks recover it
+    det.feed(60.0, BASE_TTFT, BASE_TBT)
+    det.feed(61.0, BASE_TTFT, BASE_TBT)
+    assert det.healthy
+
+
+# -- channel registry ---------------------------------------------------------
+
+def test_unknown_channel_raises():
+    with pytest.raises(channels.UnknownChannelError):
+        channels.validate_channel("lso")
+    assert channels.SLO in channels.CHANNELS
+
+
+def test_abnormality_validates_channel_at_construction():
+    with pytest.raises(channels.UnknownChannelError):
+        _diag(Kind.GPU, DECODE_STEP, [1], channel="slowdown")
+
+
+# -- serve plan ladders (registry-keyed, no core edits) -----------------------
+
+def _diag(kind, fn, workers, fleet=W, beta=0.5, mu=0.5, sigma=0.05,
+          channel=channels.SLO):
+    idx = np.asarray(sorted(workers), np.int64)
+    pats = np.tile(np.asarray([beta, mu, sigma], np.float32),
+                   (len(idx), 1))
+    a = Abnormality(function=fn, workers=idx, kind=kind,
+                    d_expect=np.ones(len(idx)), delta=np.zeros(len(idx)),
+                    patterns=pats,
+                    typical=np.asarray([0.1, 0.5, 0.05], np.float32),
+                    channel=channel)
+    return Diagnosis(a, root_cause_hint(a, fleet))
+
+
+SLO_PLAN_MATRIX = [
+    pytest.param(_diag(Kind.GPU, DECODE_STEP, [3], mu=0.3),
+                 Action.DRAIN_AND_REPLACE, Action.SHED_LOAD,
+                 id="slo_gpu_narrow"),
+    pytest.param(_diag(Kind.GPU, DECODE_STEP, range(16), mu=0.3),
+                 Action.SHED_LOAD, Action.FLAG_CODE,
+                 id="slo_gpu_widespread"),
+    pytest.param(_diag(Kind.COMM, "serve.token_sync", [5], mu=0.9),
+                 Action.DRAIN_AND_REPLACE, Action.SHED_LOAD,
+                 id="slo_comm_narrow"),
+    pytest.param(_diag(Kind.PYTHON, QUEUE_WAIT, range(20), mu=0.1),
+                 Action.SHED_LOAD, Action.FLAG_CODE,
+                 id="slo_queue_fleet"),
+    pytest.param(_diag(Kind.PYTHON, QUEUE_WAIT, [2], mu=0.1),
+                 Action.SHED_LOAD, Action.DRAIN_AND_REPLACE,
+                 id="slo_queue_subset"),
+    pytest.param(_diag(Kind.MEM, KV_READ, range(20), mu=0.2),
+                 Action.SHED_LOAD, Action.FLAG_CODE,
+                 id="slo_kv_thrash"),
+]
+
+
+@pytest.mark.parametrize("diag,first,second", SLO_PLAN_MATRIX)
+def test_slo_plan_ladders(diag, first, second):
+    ladder = plan_ladder(diag, W)
+    assert ladder[0].action == first
+    assert len(ladder) >= 2 and ladder[1].action == second
+
+
+def test_slo_ladders_leave_training_defaults_untouched():
+    """Registry regression: the same (kind, shape) diagnoses under the
+    default perf channel still walk the TRAINING ladders — registering
+    the slo rules changed nothing keyed (None, kind)."""
+    for diag, first in [
+            (_diag(Kind.GPU, "gemm_fprop", [3], channel=channels.PERF),
+             Action.REPLACE_HOSTS),
+            (_diag(Kind.COMM, "nccl:all_gather", [5], mu=0.9,
+                   channel=channels.PERF),
+             Action.REPLACE_HOSTS),
+            (_diag(Kind.MEM, "memcpy_h2d", [4], mu=0.7,
+                   channel=channels.PERF),
+             Action.FLAG_CODE)]:
+        assert plan_ladder(diag, W)[0].action == first
+
+
+def test_serve_root_cause_hints():
+    queue = _diag(Kind.PYTHON, QUEUE_WAIT, range(20), mu=0.1)
+    assert "arrival rate exceeds serving capacity" in queue.hint
+    kv = _diag(Kind.MEM, KV_READ, range(20), mu=0.2)
+    assert "KV" in kv.hint and "shed load" in kv.hint
