@@ -3,7 +3,7 @@ PY ?= python
 .PHONY: test test-wire test-train test-serve test-cov deps lint bench \
         bench-summarize bench-fleet bench-online bench-wire \
         bench-mitigation bench-tree bench-overhead bench-scenarios \
-        bench-serve bench-gate bench-gate-update
+        bench-serve bench-goodput bench-gate bench-gate-update
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -82,10 +82,17 @@ bench-scenarios:
 bench-serve:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --only serve_slo
 
+# the goodput / recovery-economics matrix (ISSUE 10, DESIGN.md §14):
+# every catalog scenario scored in windows of goodput lost from injection
+# to verified recovery (rollback restore cost included) plus the chronic
+# restart pair; writes the per-scenario table to reports/goodput.md
+bench-goodput:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only goodput
+
 # the CI benchmark-regression gate: run the gated benchmarks with the
 # CI-pinned sizes, emit machine-readable results, compare against the
 # committed baselines (benchmarks/baselines.json)
-GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,serve_slo,collector_tree,train_overhead,ability_matrix
+GATE_MODULES = summarize_backends,fleet_diagnosis,online_pipeline,wire_transport,mitigation_loop,serve_slo,collector_tree,train_overhead,ability_matrix,goodput
 GATE_ENV = REPRO_BENCH_FLEET_SIZES=8
 GATE_JSON ?= reports/bench.json
 

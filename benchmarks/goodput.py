@@ -1,0 +1,201 @@
+"""ISSUE 10: goodput accounting — the recovery ECONOMICS of every catalog
+scenario (DESIGN.md §14).
+
+The ability matrix answers "was the fault resolved correctly"; this module
+answers "what did the fault COST".  Every catalog scenario runs the closed
+loop under the standard deployment shape and is scored in the currency
+that matters to a training job: windows of goodput lost from fault
+injection to verified recovery, the iterations that bought nothing
+(degraded windows plus the steps a real rollback discarded), and the
+wall-clock restore cost.  Rollback scenarios must restore REAL on-disk
+state — a verified step installed from a checkpoint, never a label flip —
+and the matrix row pins that.
+
+The chronic pair measures the memory dividend: the same fault run twice
+against one shared ``IncidentHistory`` store.  Run 1 learns the hard way
+(wrong rung first, one escalation); run 2 — a "restarted job" — must
+recognize the signature, start the ladder at the rung that worked, and
+resolve with zero escalations (``rung_hit=Y``, the gated flag).
+
+Row families for the regression gate (benchmarks/baselines.json):
+  * ``goodput/<scenario>``   — value = mean windows lost (injection to
+    verified recovery) over the scenario's resolved expectations (-1 when
+    none resolve, e.g. the bad-standby family); derived carries
+    class/lost_iters/lost_steps/restore_s/ok (+ restored for scenarios
+    whose ladder executed a rollback);
+  * ``goodput/class_<class>`` — per-class mean windows lost (the gated
+    goodput ceiling, deterministic seeded quantities);
+  * ``goodput/matrix``        — value = scenarios run; ``restored=Y`` iff
+    every executed rollback across the catalog installed a verified
+    on-disk step (and at least one ran); ``ok`` = every expectation met;
+  * ``goodput/chronic``       — value = windows lost by the restarted
+    run; ``rung_hit=Y`` iff it started at the remembered rung and
+    resolved with zero escalations.
+
+Env knobs (CI smoke shrink, see tests/test_benchmarks_smoke.py):
+  * ``REPRO_BENCH_GOODPUT_SCENARIOS`` — comma-separated catalog scenario
+    names (default: the whole catalog).
+
+Writes the per-scenario goodput table to ``reports/goodput.md``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, List
+
+import numpy as np
+
+
+def _yn(flag: bool) -> str:
+    return "Y" if flag else "N"
+
+
+def _scenario_rows(md: List[str]) -> List[tuple]:
+    from repro.core.mitigation import Action
+    from repro.online.catalog import (FAULT_CLASSES, INJECT, SCENARIOS,
+                                      by_name, evaluate, run_scenario)
+    sel = [s.strip() for s in
+           os.environ.get("REPRO_BENCH_GOODPUT_SCENARIOS", "").split(",")
+           if s.strip()]
+    scenarios = [by_name(n) for n in sel] if sel else list(SCENARIOS)
+
+    rows: List[tuple] = []
+    cls_lost: Dict[str, List[int]] = {}
+    cls_ok: Dict[str, bool] = {}
+    cls_n: Dict[str, int] = {}
+    all_ok = True
+    rollbacks_run = rollbacks_restored = 0
+    for sc in scenarios:
+        runner, res = run_scenario(sc)
+        ev = evaluate(sc, runner, res)
+        ok = all(r["ok"] for r in ev)
+        all_ok &= ok
+        # real-state cost of every rollback the ladder executed
+        rb = [m for m in runner.engine.log
+              if m.plan.action is Action.ROLLBACK_TO_CHECKPOINT]
+        restored = [m for m in rb
+                    if m.restored_step is not None and m.rollback_verified
+                    and not m.rollback_failed]
+        rollbacks_run += len(rb)
+        rollbacks_restored += len(restored)
+        lost_steps = sum(m.lost_steps for m in rb)
+        restore_s = sum(m.restore_s for m in rb)
+        # windows of goodput lost: fault injection -> verified recovery,
+        # per resolved expectation (escalation contracts have no recovery)
+        lost_w: List[int] = []
+        for exp, r in zip(sc.expect, ev):
+            if exp.outcome != "resolved" or not r["resolved"]:
+                continue
+            inc = next(i for i in res.incidents
+                       if i.function == exp.function
+                       and i.channel == exp.channel)
+            lost_w.append(res.window_of(inc.resolved_at) - INJECT)
+        value = float(np.mean(lost_w)) if lost_w else -1.0
+        # iterations that bought nothing: every iteration of a degraded
+        # window plus the steps the rollback honestly discarded
+        lost_iters = int((sum(lost_w) + lost_steps)
+                         * runner.iters_per_window)
+        derived = (f"class={sc.fault_class};lost_iters={lost_iters};"
+                   f"lost_steps={lost_steps};restore_s={restore_s:.4f};"
+                   f"ok={_yn(ok)}")
+        if rb:
+            derived += f";restored={_yn(len(restored) == len(rb))}"
+        rows.append((f"goodput/{sc.name}", value, derived))
+        md.append(f"| {sc.name} | {sc.fault_class} | {value:.1f} "
+                  f"| {lost_iters} | {lost_steps} | {restore_s:.4f} "
+                  f"| {_yn(bool(rb) and len(restored) == len(rb))} "
+                  f"| {_yn(ok)} |")
+        cls_lost.setdefault(sc.fault_class, []).extend(lost_w)
+        cls_ok[sc.fault_class] = cls_ok.get(sc.fault_class, True) and ok
+        cls_n[sc.fault_class] = cls_n.get(sc.fault_class, 0) + 1
+    for cls in FAULT_CLASSES:
+        if cls not in cls_n:
+            continue
+        lw = cls_lost.get(cls, [])
+        rows.append((
+            f"goodput/class_{cls}",
+            float(np.mean(lw)) if lw else -1.0,
+            f"ok={_yn(cls_ok[cls])};scenarios={cls_n[cls]}"))
+    # a rollback matrix with zero rollbacks would be a vacuous green
+    restored_ok = rollbacks_run > 0 and rollbacks_restored == rollbacks_run
+    rows.append((
+        "goodput/matrix", float(len(scenarios)),
+        f"ok={_yn(all_ok)};restored={_yn(restored_ok)};"
+        f"rollbacks={rollbacks_run};scenarios={len(scenarios)}"))
+    return rows
+
+
+def _chronic_rows(md: List[str]) -> List[tuple]:
+    """The same fault twice, one shared history store: the restarted run
+    must start at the rung that worked and skip the failed-verification
+    cycle run 1 paid for."""
+    from repro.core import faults as F
+    from repro.core.mitigation import Action
+    from repro.core.simulation import GEMM, SimConfig
+    from repro.online import (EscalationPolicy, ScenarioRunner,
+                              ScheduledFault)
+    from repro.online.catalog import (BASE_HZ, FULL_HZ, INJECT, N_STANDBY,
+                                      N_WINDOWS, SEED, W, WINDOW_S)
+    from repro.online.history import IncidentHistory
+
+    def one_run(path):
+        # the cure is FLAG_CODE, but the GEMM ladder tries REPLACE_HOSTS
+        # first — run 1 must fail a verification cycle to learn that
+        esc = EscalationPolicy(n_workers=W + N_STANDBY,
+                               base_rate_hz=BASE_HZ, full_rate_hz=FULL_HZ,
+                               max_escalated=max(4, W // 16))
+        runner = ScenarioRunner(
+            SimConfig(n_workers=W, window_s=WINDOW_S, rate_hz=FULL_HZ,
+                      seed=SEED, n_standby=N_STANDBY),
+            [ScheduledFault(F.GpuThrottle(workers=(3, W // 2 + 1)),
+                            INJECT, N_WINDOWS,
+                            cures=(Action.FLAG_CODE,))],
+            n_windows=N_WINDOWS, escalation=esc, mitigation=True,
+            history=IncidentHistory(path))
+        res = runner.run()
+        inc = next(i for i in res.incidents if i.function == GEMM)
+        lost = (res.window_of(inc.resolved_at) - INJECT
+                if inc.state == "resolved" else -1)
+        first = next((m.plan.action for m in runner.engine.log
+                      if m.incident_id == inc.id), None)
+        return inc, lost, first
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "history.jsonl")
+        inc1, lost1, first1 = one_run(path)
+        inc2, lost2, first2 = one_run(path)
+    learned = (inc1.state == "resolved" and inc1.escalations >= 1
+               and not inc1.chronic)
+    rung_hit = (learned and inc2.state == "resolved" and inc2.chronic
+                and inc2.escalations == 0
+                and first2 is Action.FLAG_CODE)
+    md.append(f"| chronic_restart | perf | {float(lost2):.1f} | - | - | - "
+              f"| - | {_yn(rung_hit)} |")
+    return [(
+        "goodput/chronic", float(lost2),
+        f"rung_hit={_yn(rung_hit)};chronic={_yn(inc2.chronic)};"
+        f"escalations_run1={inc1.escalations};"
+        f"escalations_run2={inc2.escalations};"
+        f"windows_saved={lost1 - lost2 if lost1 >= 0 and lost2 >= 0 else 0}"
+    )]
+
+
+def run():
+    md = [
+        "### Goodput matrix (ISSUE 10, DESIGN.md §14)",
+        "",
+        "| scenario | class | lost windows | lost iters | lost steps "
+        "| restore s | restored | ok |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows = _scenario_rows(md) + _chronic_rows(md)
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/goodput.md", "w") as f:
+        f.write("\n".join(md) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

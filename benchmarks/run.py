@@ -24,6 +24,7 @@ MODULES = [
     ("wire_transport", "ISSUE 4: wire transport throughput / p99 latency"),
     ("mitigation_loop", "ISSUE 5: mitigation loop windows-to-resolution"),
     ("serve_slo", "ISSUE 9: serving latency-SLO matrix (serve fault class)"),
+    ("goodput", "ISSUE 10: goodput / recovery-economics matrix"),
     ("collector_tree", "ISSUE 6: sharded collector tree vs flat at W=1024"),
     ("train_overhead", "ISSUE 7: tracer overhead on the real train loop"),
     ("kernels_bench", "kernel micro-bench"),

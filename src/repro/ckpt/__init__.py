@@ -1,1 +1,3 @@
-from repro.ckpt.checkpoint import Checkpointer  # noqa: F401
+from repro.ckpt.checkpoint import Checkpointer, CheckpointError  # noqa: F401
+from repro.ckpt.recovery import (RecoveryManager,  # noqa: F401
+                                 RestoreOutcome, SimTrainState)

@@ -33,6 +33,11 @@ _EXT_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
                "float8_e5m2": ml_dtypes.float8_e5m2}
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint step directory is unusable: missing ``meta.json``,
+    unreadable metadata, or a leaf file absent (partial write)."""
+
+
 def _to_savable(v: np.ndarray) -> np.ndarray:
     if v.dtype.name in _EXT_DTYPES:
         return v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
@@ -74,6 +79,10 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self._pending: Optional[threading.Thread] = None
         self.last_save_s = 0.0
+        # a crashed process may leave .tmp_step_* behind; they were never
+        # renamed so they are not checkpoints — reclaim the disk
+        for p in self.dir.glob(".tmp_step_*"):
+            shutil.rmtree(p, ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree, extra: Optional[dict] = None,
@@ -123,13 +132,41 @@ class Checkpointer:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
 
     # -- restore --------------------------------------------------------------
+    def _read_meta(self, d: Path) -> dict:
+        """Read and validate one step dir's metadata; raises
+        ``CheckpointError`` on a torn or corrupt directory."""
+        meta_path = d / "meta.json"
+        try:
+            meta = json.loads(meta_path.read_text())
+        except OSError as e:
+            raise CheckpointError(f"{d.name}: missing meta.json ({e})")
+        except ValueError as e:
+            raise CheckpointError(f"{d.name}: corrupt meta.json ({e})")
+        for k in meta.get("leaves", {}):
+            if not (d / (k.replace("/", "__") + ".npy")).exists():
+                raise CheckpointError(
+                    f"{d.name}: partial write, leaf {k!r} missing")
+        return meta
+
+    def _is_valid(self, d: Path) -> bool:
+        try:
+            self._read_meta(d)
+        except CheckpointError:
+            return False
+        return True
+
     def steps(self):
+        """Step numbers of the VALID on-disk checkpoints, ascending.  A
+        torn ``step_<n>/`` (missing/corrupt meta.json or a leaf .npy gone)
+        is never counted, so it can never be selected as "latest"."""
         out = []
         for p in self.dir.glob("step_*"):
             try:
-                out.append(int(p.name.split("_")[1]))
+                s = int(p.name.split("_")[1])
             except ValueError:
                 continue
+            if self._is_valid(p):
+                out.append(s)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -139,13 +176,18 @@ class Checkpointer:
     def restore(self, step: int, template, shardings=None
                 ) -> Tuple[Any, dict]:
         """Restore into the current mesh: ``shardings`` (pytree matching
-        template) may come from a DIFFERENT mesh than at save time."""
+        template) may come from a DIFFERENT mesh than at save time.
+        Raises ``CheckpointError`` when the step dir is torn/corrupt."""
         self.wait()
         d = self.dir / f"step_{step}"
-        meta = json.loads((d / "meta.json").read_text())
+        meta = self._read_meta(d)
         flat = {}
         for k, info in meta["leaves"].items():
-            arr = np.load(d / (k.replace("/", "__") + ".npy"))
+            try:
+                arr = np.load(d / (k.replace("/", "__") + ".npy"))
+            except (OSError, ValueError) as e:
+                raise CheckpointError(f"{d.name}: unreadable leaf "
+                                      f"{k!r} ({e})")
             flat[k] = _from_savable(arr, info["dtype"])
         tree = _unflatten_into(template, flat)
         if shardings is not None:

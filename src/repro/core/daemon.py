@@ -86,17 +86,20 @@ class PerfTrackerDaemon:
         return upload
 
     def send_anchors(self, window: int, durations,
-                     numerics=None) -> None:
+                     numerics=None, slo=None) -> None:
         """Ship a REAL workload's measured iteration durations for the
         window (control grade — the job-level detector stream is merged
         from these, so the frame is never dropped).  ``numerics``
         optionally carries the worker's per-iteration (loss, grad_norm)
-        pairs for the numerics channel (DESIGN.md §12a); omitted, the
-        frame is byte-identical to the historical format."""
+        pairs for the numerics channel (DESIGN.md §12a) and ``slo`` the
+        per-iteration (p99_ttft, p99_tbt) pairs for the serving SLO
+        channel (§13); omitted, the frame is byte-identical to the
+        historical format."""
         from repro.transport import framing
         self.client.send_msg(framing.anchors_msg(window, self.worker,
                                                  durations,
-                                                 numerics=numerics),
+                                                 numerics=numerics,
+                                                 slo=slo),
                              droppable=False)
 
     def recv_control(self, timeout: Optional[float] = None):

@@ -264,10 +264,12 @@ def by_name(name: str) -> Scenario:
                    f"(known: {', '.join(s.name for s in SCENARIOS)})")
 
 
-def run_scenario(sc: Scenario, verbose: bool = False
+def run_scenario(sc: Scenario, verbose: bool = False, history=None
                  ) -> Tuple[ScenarioRunner, ScenarioResult]:
     """Run one catalog scenario under the standard deployment shape with
-    the mitigation loop closed; returns (runner, result)."""
+    the mitigation loop closed; returns (runner, result).  ``history``
+    optionally threads a chronic-fault store through the run (a restarted
+    job re-ranking its ladders from persisted outcomes)."""
     esc = EscalationPolicy(n_workers=W + N_STANDBY, base_rate_hz=BASE_HZ,
                            full_rate_hz=FULL_HZ,
                            max_escalated=max(4, W // 16))
@@ -275,7 +277,7 @@ def run_scenario(sc: Scenario, verbose: bool = False
         SimConfig(n_workers=W, window_s=WINDOW_S, rate_hz=FULL_HZ,
                   seed=SEED, n_standby=N_STANDBY, workload=sc.workload),
         list(sc.schedule), n_windows=sc.n_windows,
-        escalation=esc, mitigation=True)
+        escalation=esc, mitigation=True, history=history)
     return runner, runner.run(verbose=verbose)
 
 

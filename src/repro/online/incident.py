@@ -80,6 +80,12 @@ class Incident:
     function: str = ""                  # set at confirmation
     kind: Optional[object] = None
     workers: Tuple[int, ...] = ()       # last implicated worker set
+    #: union of every worker set this incident implicated over its life —
+    #: the persistence signature survives a re-mesh moving the fault
+    workers_seen: Tuple[int, ...] = ()
+    #: the attached ladder was re-ranked from persisted outcomes: rung 0
+    #: is the action that cured this signature in a previous run
+    chronic: bool = False
     confirmed_at: Optional[float] = None
     resolved_at: Optional[float] = None
     escalated_at: Optional[float] = None
@@ -140,8 +146,13 @@ class IncidentManager:
 
     def __init__(self, fleet_size: int, clear_windows: int = 2,
                  confirm_windows: int = 2, verify_windows: int = 2,
-                 max_escalations: int = 2, settle_windows: int = 1):
+                 max_escalations: int = 2, settle_windows: int = 1,
+                 history=None):
         self.fleet_size = fleet_size
+        #: optional ``repro.online.history.IncidentHistory``: terminal
+        #: incidents are recorded, and freshly-attached ladders re-rank
+        #: from persisted outcomes (chronic-fault memory)
+        self.history = history
         self.clear_windows = clear_windows
         #: consecutive abnormal windows a TRIGGER-LESS abnormality needs
         #: before it becomes its own incident.  An abnormality matching a
@@ -220,6 +231,7 @@ class IncidentManager:
             if inc.state == OPEN or inc.windows_clear >= 1:
                 inc.resolved_at = rec.time
                 inc._transition(RESOLVED, rec.time)
+                self._record_history(inc)
                 resolved.append(inc)
         return resolved
 
@@ -274,6 +286,8 @@ class IncidentManager:
                 inc.kind = a.kind
                 self._link_recurrence(inc, a)
             inc.workers = tuple(int(w) for w in a.workers)
+            inc.workers_seen = tuple(sorted(
+                set(inc.workers_seen) | set(inc.workers)))
             inc.windows_clear = 0
             hit[inc.id] = True
             if inc.state == OPEN:
@@ -282,6 +296,10 @@ class IncidentManager:
                 changed.append(inc)
             elif inc.state == CONFIRMED:
                 inc.plans = plan_ladder(d, self.fleet_size)
+                if self.history is not None:
+                    inc.plans, inc.chronic = self.history.rerank(
+                        inc.plans, inc.channel, inc.function,
+                        inc.workers_seen)
                 inc._transition(MITIGATING, t)
                 changed.append(inc)
             elif inc.state == VERIFYING \
@@ -315,6 +333,7 @@ class IncidentManager:
                 continue
             inc.resolved_at = t
             inc._transition(RESOLVED, t)
+            self._record_history(inc)
             changed.append(inc)
         return changed
 
@@ -329,8 +348,22 @@ class IncidentManager:
             inc.escalated_at = t
             inc._transition(ESCALATED, t)
             self._suppressed[(inc.channel, inc.function)] = 0
+            self._record_history(inc)
         else:
             inc.rung += 1
+
+    def _record_history(self, inc: Incident) -> None:
+        """Persist a terminal incident's signature + ladder outcome to the
+        chronic-fault store (no-op without one, or for incidents that
+        never localized a function)."""
+        if self.history is None or not inc.function:
+            return
+        n = len(inc.applied)
+        attempts = [{"action": plan.action.value, "rung": k,
+                     "ok": inc.state == RESOLVED and k == n - 1}
+                    for k, (_, plan) in enumerate(inc.applied)]
+        self.history.record(inc.channel, inc.function,
+                            inc.workers_seen, inc.state, attempts)
 
     def _link_recurrence(self, inc: Incident, a: Abnormality) -> None:
         """Link a freshly-confirmed incident to the most recent terminal

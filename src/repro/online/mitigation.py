@@ -19,6 +19,19 @@ an abnormality persists (``plan_ladder``); this engine is what actually
     per-fault-model playbook below).  A misdiagnosed/no-op plan cures
     nothing and leaves the fault live.
 
+With a ``RecoveryManager`` attached (DESIGN.md §14) the checkpoint verbs
+act on REAL on-disk state: ``CHECKPOINT_NOW`` drives an actual async save,
+``ROLLBACK_TO_CHECKPOINT`` restores the latest valid step into the live
+workload (parameter-equality verified), and a replace-like rung first
+checkpoints, re-meshes, then elastically restores onto the new mesh.  A
+rollback that finds no usable checkpoint is an HONEST failure: the engine
+cures nothing, the record carries ``rollback_failed``, verification sees
+the signature survive, and the incident escalates — never a faked cure.
+Without a recovery manager (worker-process replay engines, legacy
+callers) the checkpoint verbs keep their historical label-only cure
+semantics; replayed plans carry the parent's rollback outcome so cure
+decisions stay bit-identical across process boundaries.
+
 Whether an action cures a fault is the SCENARIO's ground truth, not the
 diagnosis's: a schedule can declare that a GPU-looking fault is really a
 software problem (``cures=(Action.FLAG_CODE,)``), in which case replacing
@@ -59,6 +72,20 @@ class AppliedMitigation:
     remapped: List[str] = field(default_factory=list)   # followed ranks
     dropped: List[int] = field(default_factory=list)
     replacements: List[int] = field(default_factory=list)
+    #: real-state effects (RecoveryManager attached, DESIGN.md §14):
+    #: step saved by CHECKPOINT_NOW / a replace-like rung's pre-drop save
+    checkpoint_step: Optional[int] = None
+    #: step a rollback (or post-replace elastic restore) installed
+    restored_step: Optional[int] = None
+    #: training steps the rollback discarded
+    lost_steps: int = 0
+    #: wall-clock restore cost, seconds (goodput accounting)
+    restore_s: float = 0.0
+    #: installed state compared equal to the on-disk arrays
+    rollback_verified: bool = False
+    #: the rollback found no usable checkpoint (honest degradation: the
+    #: engine cured nothing and verification will fail)
+    rollback_failed: bool = False
 
     def __str__(self) -> str:
         out = (f"incident #{self.incident_id} rung {self.rung}: "
@@ -69,6 +96,11 @@ class AppliedMitigation:
             out += f" cured={self.cured}"
         if self.remapped:
             out += f" followed_ranks={self.remapped}"
+        if self.restored_step is not None:
+            out += (f" restored_step={self.restored_step}"
+                    f" lost_steps={self.lost_steps}")
+        if self.rollback_failed:
+            out += " ROLLBACK-FAILED"
         return out
 
 
@@ -77,9 +109,16 @@ def plan_to_wire(m: AppliedMitigation) -> Dict:
     §10): the (action, workers, window) triple is everything a worker
     process needs to replay the plan deterministically on its OWN engine
     — ``FleetSimulator.replace_hosts`` and every cure decision are pure
-    functions of that triple plus shared scenario state."""
-    return {"window": int(m.window), "action": m.plan.action.value,
-            "workers": [int(w) for w in m.plan.workers]}
+    functions of that triple plus shared scenario state.  The one
+    exception is a rollback's outcome, which depends on the parent's
+    on-disk checkpoint state: it rides as ``rollback_failed`` (present
+    only when true, keeping legacy frames byte-identical) so replay
+    engines skip the same cures the parent skipped."""
+    out = {"window": int(m.window), "action": m.plan.action.value,
+           "workers": [int(w) for w in m.plan.workers]}
+    if m.rollback_failed:
+        out["rollback_failed"] = True
+    return out
 
 
 def plan_from_wire(d: Dict) -> Tuple[MitigationPlan, int]:
@@ -97,7 +136,10 @@ class MitigationEngine:
     plus any re-pinning replace-hosts caused.
     """
 
-    def __init__(self, sim: FleetSimulator, schedule: Sequence):
+    def __init__(self, sim: Optional[FleetSimulator], schedule: Sequence,
+                 recovery=None):
+        #: None for real (trainer) workloads — there is no simulated mesh
+        #: to re-mesh; checkpoint verbs still act through ``recovery``
         self.sim = sim
         self.schedule = list(schedule)
         #: current Fault object per schedule entry (replace_hosts re-pins
@@ -105,7 +147,17 @@ class MitigationEngine:
         self._live: List[F.Fault] = [sf.fault for sf in self.schedule]
         #: window each entry was cured at (None = still live)
         self._cured_at: List[Optional[int]] = [None] * len(self.schedule)
+        #: ``repro.ckpt.recovery.RecoveryManager`` binding checkpoint
+        #: verbs to real on-disk state (None = label-only semantics)
+        self.recovery = recovery
         self.log: List[AppliedMitigation] = []
+
+    def begin_window(self, window: int) -> None:
+        """Cadence hook, called by the scenario runner at the top of every
+        window: periodic baseline checkpoints + the sim side-car's
+        training step (no-op without a recovery manager)."""
+        if self.recovery is not None:
+            self.recovery.on_window(window)
 
     def cures(self, sf) -> Tuple[Action, ...]:
         declared = getattr(sf, "cures", None)
@@ -148,16 +200,46 @@ class MitigationEngine:
         return applied
 
     def apply(self, plan: MitigationPlan, window: int,
-              incident_id: int = -1, rung: int = 0) -> AppliedMitigation:
-        """Execute one plan against the simulator + schedule."""
+              incident_id: int = -1, rung: int = 0,
+              rollback_failed: Optional[bool] = None) -> AppliedMitigation:
+        """Execute one plan against the simulator + schedule (and, with a
+        recovery manager, against real on-disk state).
+
+        ``rollback_failed`` replays a remote engine's rollback outcome
+        (wire control plane): None = decide locally."""
         rec = AppliedMitigation(incident_id=incident_id, window=window,
                                 rung=rung, plan=plan)
         mapping: Dict[int, Optional[int]] = {}
-        if plan.action in _REPLACE_LIKE and plan.workers:
+        if plan.action in _REPLACE_LIKE and plan.workers \
+                and self.sim is not None:
+            if self.recovery is not None:
+                # checkpoint-then-replace: protect state before hosts drop
+                rec.checkpoint_step = self.recovery.checkpoint()
             mapping = self.sim.replace_hosts(plan.workers)
             rec.dropped = sorted(mapping)
             rec.replacements = sorted(
                 r for r in mapping.values() if r is not None)
+            if self.recovery is not None and mapping:
+                # elastic restore of the pre-drop save onto the re-meshed
+                # fleet (DESIGN.md §4: shardings follow the CURRENT mesh)
+                out = self.recovery.rollback()
+                if out.ok:
+                    rec.restored_step = out.step
+                    rec.restore_s = out.restore_s
+                    rec.rollback_verified = out.verified
+        if plan.action is Action.CHECKPOINT_NOW \
+                and self.recovery is not None:
+            rec.checkpoint_step = self.recovery.checkpoint()
+        if plan.action is Action.ROLLBACK_TO_CHECKPOINT:
+            failed = rollback_failed
+            if failed is None and self.recovery is not None:
+                out = self.recovery.rollback()
+                rec.restored_step = out.step if out.ok else None
+                rec.restore_s = out.restore_s
+                rec.lost_steps = out.lost_steps
+                rec.rollback_verified = out.verified
+                failed = not (out.ok and out.verified)
+            rec.rollback_failed = bool(failed)
         for j, sf in enumerate(self.schedule):
             if self._cured_at[j] is not None or not sf.active(window):
                 continue
@@ -198,6 +280,12 @@ class MitigationEngine:
                         self._live[j] = moved
                         rec.remapped.append(name)
             elif plan.action in cures:
+                if plan.action is Action.ROLLBACK_TO_CHECKPOINT \
+                        and rec.rollback_failed:
+                    # nothing was restored: claiming a cure here would be
+                    # a lie — the signature stays live and verification
+                    # fails honestly
+                    continue
                 self._cured_at[j] = window
                 rec.cured.append(name)
         self.log.append(rec)

@@ -76,7 +76,8 @@ class OnlinePipeline:
                  max_escalations: int = 2, settle_windows: int = 1,
                  numerics_cfg: Optional[NumericsConfig] = None,
                  slo_cfg: Optional[SloConfig] = None,
-                 profile_channel: str = channels.PERF):
+                 profile_channel: str = channels.PERF,
+                 history=None):
         self.n_workers = int(n_workers)
         self.service = PerfTrackerService(
             family=family, detector_cfg=detector_cfg,
@@ -99,7 +100,8 @@ class OnlinePipeline:
                                          clear_windows=clear_windows,
                                          verify_windows=verify_windows,
                                          max_escalations=max_escalations,
-                                         settle_windows=settle_windows)
+                                         settle_windows=settle_windows,
+                                         history=history)
         self.escalation = escalation
         #: MitigationEngine executing incident ladders each tick (None =
         #: plans are attached but never acted on, the pre-§9 behavior)
@@ -312,7 +314,7 @@ class OnlinePipeline:
         # lost keeps implicating via its frozen EMA row (DESIGN.md §8), but
         # a worker REPLACED out of the mesh (and a standby not yet in it)
         # is structurally excluded from localization (DESIGN.md §9)
-        if self.mitigator is not None:
+        if self.mitigator is not None and self.mitigator.sim is not None:
             self.set_membership(self.mitigator.sim.active_workers)
         abn: List[Abnormality] = self.service.localizer.localize(
             pats, kinds, present=self._members)

@@ -43,6 +43,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.ckpt.recovery import RecoveryManager
 from repro.core import faults as F
 from repro.core.detector import DetectorConfig
 from repro.core.mitigation import Action
@@ -52,7 +53,7 @@ from repro.online.mitigation import MitigationEngine, plan_to_wire
 from repro.online.pipeline import OnlinePipeline, WindowReport
 from repro.online.workload import (SimWorkload, WorkloadSource,
                                    merge_anchor_durations, merge_numerics,
-                                   synth_anchor_events)
+                                   merge_slo, synth_anchor_events)
 
 #: per-window profile seed offset (must match _mp_worker_main)
 _WINDOW_SEED_STRIDE = 7919
@@ -141,7 +142,8 @@ class ScenarioRunner:
                  clear_windows: int = 2, mitigation: bool = False,
                  verify_windows: int = 2, max_escalations: int = 2,
                  settle_windows: int = 1,
-                 workload: Optional[WorkloadSource] = None):
+                 workload: Optional[WorkloadSource] = None,
+                 recovery="auto", history=None):
         self.sim_cfg = sim_cfg
         self.schedule = list(schedule)
         self.n_windows = n_windows
@@ -153,9 +155,6 @@ class ScenarioRunner:
             self.workload: WorkloadSource = SimWorkload(
                 self.sim, sim_cfg.seed, _WINDOW_SEED_STRIDE)
         else:
-            if mitigation:
-                raise ValueError("mitigation closes the loop against the "
-                                 "simulator; it needs the sim workload")
             self.sim = getattr(workload, "sim", None)
             self.workload = workload
         # the pipeline's worker axis spans standbys too: their rows stay
@@ -170,13 +169,30 @@ class ScenarioRunner:
             verify_windows=verify_windows,
             max_escalations=max_escalations,
             settle_windows=settle_windows,
-            profile_channel=self.workload.channel)
+            profile_channel=self.workload.channel,
+            history=history)
         #: ``mitigation=True`` closes the loop (DESIGN.md §9): incidents'
         #: ladder rungs execute against the simulator each tick, and the
-        #: schedule's live fault view follows cures/re-meshes
+        #: schedule's live fault view follows cures/re-meshes.  A
+        #: ``RecoveryManager`` (DESIGN.md §14) binds the checkpoint verbs
+        #: to real on-disk state: ``recovery="auto"`` provisions one per
+        #: run — the sim side-car state for simulator workloads, the live
+        #: ``snapshot_state``/``install_state`` hooks for real workloads
+        #: that expose them — pass None (or an explicit manager) to
+        #: override
         self.engine: Optional[MitigationEngine] = None
         if mitigation:
-            self.engine = MitigationEngine(self.sim, self.schedule)
+            rec = recovery
+            if isinstance(rec, str) and rec == "auto":
+                if self.sim is not None and isinstance(self.workload,
+                                                       SimWorkload):
+                    rec = RecoveryManager.for_sim(seed=self.sim.cfg.seed)
+                elif hasattr(self.workload, "snapshot_state"):
+                    rec = RecoveryManager.for_workload(self.workload)
+                else:
+                    rec = None
+            self.engine = MitigationEngine(self.sim, self.schedule,
+                                           recovery=rec)
             self.pipeline.attach_mitigator(self.engine)
 
     def faults_at(self, window: int) -> List[F.Fault]:
@@ -188,6 +204,8 @@ class ScenarioRunner:
         reports: List[WindowReport] = []
         spans: List[Tuple[float, float]] = []
         for i in range(self.n_windows):
+            if self.engine is not None:
+                self.engine.begin_window(i)
             faults = self.faults_at(i)
             # the escalation rates are a pure read (the policy only updates
             # at the previous window's tick), so sampling them before the
@@ -344,6 +362,8 @@ class ScenarioRunner:
                     f"fewer than {W_total} daemons connected within "
                     f"{window_timeout}s (see {log_path or 'log'})")
             for i in range(self.n_windows):
+                if self.engine is not None:
+                    self.engine.begin_window(i)
                 self.sim.faults = self.faults_at(i)
                 t0 = self.sim.anchor_clock
                 anchors = self.sim.anchor_events(self.iters_per_window,
@@ -485,6 +505,10 @@ class ScenarioRunner:
                 if num:
                     self.pipeline.feed_numerics(merge_numerics(
                         [num[w] for w in sorted(num)], merged, t0))
+                slo = getattr(batch, "slo", None) or {}
+                if slo:
+                    self.pipeline.feed_slo(merge_slo(
+                        [slo[w] for w in sorted(slo)], merged, t0))
                 self.pipeline.poll_blockage(clock)
                 report = self.pipeline.window_tick_batch(batch, t=clock,
                                                          rates=rates)
@@ -560,7 +584,12 @@ def _mp_worker_main(addresses, worker_ids, sim_cfg, schedule,
             if engine is not None:
                 for d in msg.get("plans", []):
                     plan, applied_at = plan_from_wire(d)
-                    engine.apply(plan, applied_at)
+                    # cures must match the parent bit-for-bit: a rollback's
+                    # outcome depends on the parent's on-disk checkpoints,
+                    # so it rides the wire instead of being re-decided here
+                    engine.apply(plan, applied_at,
+                                 rollback_failed=d.get("rollback_failed",
+                                                       False))
                 sim.faults = engine.faults_at(i)
             else:
                 sim.faults = [sf.fault for sf in schedule if sf.active(i)]

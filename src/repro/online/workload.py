@@ -135,6 +135,17 @@ def merge_numerics(per_worker: Sequence[Sequence[Tuple[float, float]]],
     return out
 
 
+def merge_slo(per_worker: Sequence[Sequence[Tuple[float, float]]],
+              durations: Sequence[float], t0: float
+              ) -> List[Tuple[float, float, float]]:
+    """Job-level (t, p99_ttft, p99_tbt) samples from per-worker
+    per-iteration (ttft, tbt) pairs shipped on ``anchors`` wire frames:
+    the fleet's p99 is dominated by its worst worker, so the merge rule is
+    the same worst-per-index fold the numerics channel uses (one stalled
+    worker IS the job's SLO violation)."""
+    return merge_numerics(per_worker, durations, t0)
+
+
 def synth_anchor_events(durations: Sequence[float], t0: float
                         ) -> Tuple[List[Tuple[str, float]], float]:
     """(D, O) anchor pairs for measured iteration durations, chained on a

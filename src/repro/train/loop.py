@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.ckpt.checkpoint import Checkpointer
+from repro.ckpt.checkpoint import Checkpointer, CheckpointError
 from repro.core.events import Kind
 from repro.core.mitigation import Action, plan_mitigations
 from repro.data.pipeline import DataConfig, DataLoader, SyntheticLM
@@ -254,7 +254,8 @@ class Trainer:
                     and (step + 1) % self.tc.ckpt_every == 0:
                 self.ckpt.save(step + 1, {"params": params,
                                           "opt": opt_state})
-            self._maybe_mitigate(params, opt_state, step + 1)
+            params, opt_state = self._maybe_mitigate(params, opt_state,
+                                                     step + 1)
         if self.ckpt:
             self.ckpt.save(start + n, {"params": params, "opt": opt_state},
                            async_=False)
@@ -263,9 +264,10 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _maybe_mitigate(self, params, opt_state, step: int):
-        """PerfTracker output drives fault tolerance (DESIGN.md §4)."""
+        """PerfTracker output drives fault tolerance (DESIGN.md §4).
+        Returns the (possibly rolled-back) live state."""
         if not self.pt or not self.pt.results:
-            return
+            return params, opt_state
         res = self.pt.results.pop()
         self.last_diagnosis = res
         plans = plan_mitigations(res.diagnoses, fleet_size=1)
@@ -281,3 +283,19 @@ class Trainer:
             if p.action in (Action.REPLACE_HOSTS, Action.CHECKPOINT_NOW) \
                     and self.ckpt:
                 self.ckpt.save(step, {"params": params, "opt": opt_state})
+            # rollback is REAL (DESIGN.md §14): restore the latest valid
+            # on-disk step into the live loop; with nothing usable on
+            # disk the state is honestly left as-is (no faked cure)
+            if p.action == Action.ROLLBACK_TO_CHECKPOINT and self.ckpt:
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    try:
+                        (params, opt_state), meta = self._restore(
+                            latest, params, opt_state)
+                        self._iter = meta["step"]
+                        print(f"[perftracker] rolled back to step "
+                              f"{meta['step']}", flush=True)
+                    except CheckpointError as e:
+                        print(f"[perftracker] rollback failed: {e}",
+                              flush=True)
+        return params, opt_state

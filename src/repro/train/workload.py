@@ -142,6 +142,23 @@ class GcPause(LiveFault):
         worker.trainer.gc_every = max(1, int(self.every))
 
 
+@dataclass(frozen=True)
+class ParamCorruption(LiveFault):
+    """Corrupt the LIVE model state (a bad batch / optimizer blow-up,
+    FLARE-style): every parameter is scaled so the REAL loss and gradient
+    norm explode on the numerics channel.  Unlike the timing faults above
+    this is state damage, not a hook — ``clear_faults`` cannot undo it;
+    only restoring a checkpoint can, which is exactly what the
+    ``ROLLBACK_TO_CHECKPOINT`` rung must prove it does.  While the fault
+    stays scheduled it re-corrupts each window, so a rollback alone (with
+    the underlying cause uncured) does not fake a recovery."""
+    scale: float = 1e3
+    nan: bool = False            # plant a NaN too (the immediate trigger)
+
+    def apply(self, worker: "_TrainWorker") -> None:
+        worker.corrupt_params(self.scale, self.nan)
+
+
 def _install_faults(workers: Sequence["_TrainWorker"],
                     faults: Sequence[LiveFault]) -> None:
     for tw in workers:
@@ -196,6 +213,22 @@ class _TrainWorker:
         t = self.trainer
         t.data_burn_s = t.step_pad_s = t.gc_pause_s = 0.0
         t.gc_every = 1
+
+    def corrupt_params(self, scale: float, nan: bool = False) -> None:
+        """State-damage fault hook: blow up the live parameters (and with
+        ``nan``, plant a non-finite value) so the next real train steps
+        diverge for real."""
+        import jax
+        import jax.numpy as jnp
+        self.params = jax.tree_util.tree_map(
+            lambda x: x * jnp.asarray(scale, x.dtype), self.params)
+        if nan:
+            leaves, treedef = jax.tree_util.tree_flatten(self.params)
+            first = leaves[0]
+            leaves[0] = first.at[(0,) * first.ndim].set(
+                jnp.asarray(float("nan"), first.dtype)) \
+                if first.ndim else jnp.asarray(float("nan"), first.dtype)
+            self.params = jax.tree_util.tree_unflatten(treedef, leaves)
 
     def run_window(self, iters: int, rate: Optional[float] = None):
         """One profiling window: returns (durations, WorkerProfile).
@@ -272,6 +305,28 @@ class TrainerWorkload(WorkloadSource):
     def base_iter_s(self) -> float:
         self._ensure_workers()
         return float(np.median([tw.base_iter_s for tw in self.workers]))
+
+    # -- recovery hooks (DESIGN.md §14) ------------------------------------
+    def snapshot_state(self):
+        """Gather the fleet's LIVE training state for a checkpoint:
+        ``(step, tree)`` with one ``{params, opt}`` subtree per worker.
+        The step is the trainers' iteration counter (identical across
+        workers — they run the same windows)."""
+        self._ensure_workers()
+        step = int(self.workers[0].trainer._iter)
+        tree = {str(tw.worker): {"params": tw.params, "opt": tw.opt_state}
+                for tw in self.workers}
+        return step, tree
+
+    def install_state(self, step: int, tree) -> None:
+        """Push a restored checkpoint back into the running trainers
+        (the ROLLBACK_TO_CHECKPOINT landing): live params/opt_state and
+        the iteration counters rewind to the saved step."""
+        self._ensure_workers()
+        for tw in self.workers:
+            st = tree[str(tw.worker)]
+            tw.params, tw.opt_state = st["params"], st["opt"]
+            tw.trainer._iter = int(step)
 
     def run_window(self, window: int, faults: Sequence, iters: int,
                    rates: Optional[np.ndarray]) -> WindowData:

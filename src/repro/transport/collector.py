@@ -46,6 +46,10 @@ class WindowBatch:
     #: channel (only when the workload ships them on its anchors frames)
     numerics: Dict[int, List[Tuple[float, float]]] = field(
         default_factory=dict)
+    #: per-worker per-iteration (p99_ttft, p99_tbt) pairs for the serving
+    #: latency-SLO channel (same ride-along contract as ``numerics``)
+    slo: Dict[int, List[Tuple[float, float]]] = field(
+        default_factory=dict)
     ended: Set[int] = field(default_factory=set)
     duplicates: int = 0                       # deduped (window, worker) copies
     client_dropped: int = 0                   # cumulative backpressure drops
@@ -150,6 +154,10 @@ class WindowCollector:
                     b.numerics.setdefault(
                         w, [(float(p[0]), float(p[1]))
                             for p in msg["numerics"]])
+                if msg.get("slo") is not None:
+                    b.slo.setdefault(
+                        w, [(float(p[0]), float(p[1]))
+                            for p in msg["slo"]])
         elif t == "window_end":
             with self._cv:
                 if int(msg["window"]) <= self._popped_through:

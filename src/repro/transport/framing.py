@@ -21,12 +21,14 @@ Every frame body is a msgpack map with a ``"t"`` type tag:
                    backpressure drop count and ``reconnects`` the number
                    of times the client re-dialed the collector — loss
                    accounting rides on this frame, which is never dropped)
-  ``anchors``      client -> server   {window, worker, durs, numerics?}
-                   (a REAL workload's measured per-iteration durations for
-                   the window — the parent merges them into the job-level
-                   detector stream; control grade, never dropped.
-                   ``numerics`` optionally carries per-iteration
-                   (loss, grad_norm) pairs for the numerics channel)
+  ``anchors``      client -> server   {window, worker, durs, numerics?,
+                   slo?} (a REAL workload's measured per-iteration
+                   durations for the window — the parent merges them into
+                   the job-level detector stream; control grade, never
+                   dropped.  ``numerics`` optionally carries per-iteration
+                   (loss, grad_norm) pairs for the numerics channel;
+                   ``slo`` carries (p99_ttft, p99_tbt) pairs for the
+                   serving latency-SLO channel)
   ``shard``        leaf -> root       one COMPACTED rack window: packed
                    columnar patterns (float32 rows), present workers,
                    missing/dup/drop counters (DESIGN.md §10)
@@ -181,7 +183,8 @@ def window_end_msg(window: int, worker: int, sent: int, dropped: int,
 
 
 def anchors_msg(window: int, worker: int, durations: Sequence[float],
-                numerics: Optional[Sequence[Tuple[float, float]]] = None
+                numerics: Optional[Sequence[Tuple[float, float]]] = None,
+                slo: Optional[Sequence[Tuple[float, float]]] = None
                 ) -> Dict:
     """Per-window anchor report of a REAL workload (DESIGN.md §11): the
     worker's measured iteration durations, in iteration order.  Control
@@ -189,13 +192,17 @@ def anchors_msg(window: int, worker: int, durations: Sequence[float],
     (D, O) stream is merged from these.
 
     ``numerics`` optionally rides along: per-iteration (loss, grad_norm)
-    pairs for the numerics channel (DESIGN.md §12a).  The field is only
-    present when provided, so workloads without a numerics stream produce
-    byte-identical frames to the pre-§12 wire format."""
+    pairs for the numerics channel (DESIGN.md §12a).  ``slo`` does the
+    same for serving workloads: per-iteration (p99_ttft, p99_tbt) pairs
+    for the latency-SLO channel (DESIGN.md §13).  Each field is only
+    present when provided, so workloads without those streams produce
+    byte-identical frames to the earlier wire formats."""
     msg = {"t": "anchors", "window": int(window), "worker": int(worker),
            "durs": [float(d) for d in durations]}
     if numerics is not None:
         msg["numerics"] = [[float(a), float(b)] for a, b in numerics]
+    if slo is not None:
+        msg["slo"] = [[float(a), float(b)] for a, b in slo]
     return msg
 
 

@@ -24,6 +24,7 @@ SHRINK = {
     "REPRO_BENCH_ONLINE_CASES": "C1P1_gpu_throttle",
     "REPRO_BENCH_ABILITY_CASES": "C1P1_gpu_throttle",
     "REPRO_BENCH_ABILITY_SCENARIOS": "N1_loss_spike",
+    "REPRO_BENCH_GOODPUT_SCENARIOS": "N1_loss_spike",
     "REPRO_BENCH_WIRE_W": "4",
     "REPRO_BENCH_WIRE_WINDOWS": "2",
     "REPRO_BENCH_MITIGATION_W": "8",

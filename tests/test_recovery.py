@@ -1,0 +1,305 @@
+"""ISSUE 10: checkpoint-aware recovery (DESIGN.md §14).
+
+Four layers of coverage:
+
+  * ``Checkpointer`` hardening — a torn ``step_<n>/`` (missing/corrupt
+    ``meta.json``, a leaf ``.npy`` gone) is never counted as a valid step,
+    so it can never be selected as "latest"; stale ``.tmp_step_*`` from a
+    crashed writer is reclaimed; retention keeps only the last ``keep``
+    VALID steps;
+  * ``RecoveryManager`` — the save/rollback roundtrip restores and
+    parameter-verifies real on-disk state (lost steps accounted), and a
+    rollback with nothing usable on disk is an honest ``ok=False``;
+  * the engine — ``CHECKPOINT_NOW`` drives an actual save,
+    ``ROLLBACK_TO_CHECKPOINT`` restores for real, and a failed rollback
+    cures NOTHING: the signature survives verification and the incident
+    escalates instead of faking a recovery;
+  * chronic-fault memory — terminal incidents persist their signature +
+    ladder outcome (``repro.online.history``), and a restarted run facing
+    the same signature starts its ladder at the rung that worked last
+    time (zero escalations the second time around).
+"""
+
+import numpy as np
+import pytest
+
+from repro.ckpt import Checkpointer, CheckpointError, RecoveryManager
+from repro.core import faults as F
+from repro.core.mitigation import Action, MitigationPlan
+from repro.core.simulation import GEMM
+from repro.online import ESCALATED, RESOLVED, ScheduledFault
+from repro.online.history import IncidentHistory
+from repro.online.mitigation import MitigationEngine
+from tests.test_mitigation import INJECT, run_mitigated
+
+LOSS_FN = "numerics.loss"
+
+
+def _tree(v=1.0):
+    return {"w": np.full(4, v, np.float32), "b": np.zeros(2, np.float32)}
+
+
+# -- Checkpointer hardening ---------------------------------------------------
+
+def test_torn_dir_missing_meta_never_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), async_=False)
+    (tmp_path / "step_9").mkdir()          # torn: renamed but no meta.json
+    assert ck.steps() == [5]
+    assert ck.latest_step() == 5
+
+
+def test_torn_dir_missing_leaf_never_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), async_=False)
+    ck.save(9, _tree(2.0), async_=False)
+    (tmp_path / "step_9" / "w.npy").unlink()      # partial write
+    assert ck.latest_step() == 5
+    with pytest.raises(CheckpointError, match="partial write"):
+        ck.restore(9, _tree())
+
+
+def test_corrupt_meta_never_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), async_=False)
+    (tmp_path / "step_5" / "meta.json").write_text("{not json")
+    assert ck.latest_step() is None
+    with pytest.raises(CheckpointError, match="corrupt meta.json"):
+        ck.restore(5, _tree())
+
+
+def test_unreadable_leaf_raises_checkpoint_error(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), async_=False)
+    (tmp_path / "step_5" / "w.npy").write_bytes(b"garbage")
+    with pytest.raises(CheckpointError, match="unreadable leaf"):
+        ck.restore(5, _tree())
+
+
+def test_stale_tmp_dirs_swept_on_init(tmp_path):
+    tmp = tmp_path / ".tmp_step_7"
+    tmp.mkdir()
+    (tmp / "w.npy").write_bytes(b"half a write")
+    Checkpointer(str(tmp_path))
+    assert not tmp.exists()
+
+
+def test_retention_keeps_last_k_valid(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(float(s)), async_=False)
+    assert ck.steps() == [3, 4]
+    tree, meta = ck.restore(4, _tree())
+    assert meta["step"] == 4
+    np.testing.assert_array_equal(tree["w"], np.full(4, 4.0, np.float32))
+
+
+# -- RecoveryManager ----------------------------------------------------------
+
+def test_sim_rollback_roundtrip_verified(tmp_path):
+    mgr = RecoveryManager.for_sim(seed=3, directory=str(tmp_path),
+                                  save_every=3)
+    for w in range(5):                 # saves at windows 0 and 3
+        mgr.on_window(w)
+    assert mgr.saved_steps == [0, 3]
+    saved_w = np.asarray(mgr.state.params["w"])    # post-install compare
+    out = mgr.rollback()
+    assert out.ok and out.verified
+    assert out.step == 3 and out.lost_steps == 2
+    assert out.restore_s > 0.0
+    assert mgr.state.step == 3
+    assert mgr.total_lost_steps == 2
+    # the installed params really are the step-3 arrays, not the live ones
+    assert not np.array_equal(np.asarray(mgr.state.params["w"]), saved_w)
+
+
+def test_rollback_empty_dir_is_honest_failure(tmp_path):
+    mgr = RecoveryManager.for_sim(seed=3, directory=str(tmp_path),
+                                  save_every=0)
+    for w in range(4):
+        mgr.on_window(w)               # save_every=0: nothing ever saved
+    before = np.asarray(mgr.state.params["w"]).copy()
+    out = mgr.rollback()
+    assert not out.ok and not out.verified
+    assert "no valid checkpoint" in out.error
+    # the live state was not touched by the failed rollback
+    np.testing.assert_array_equal(np.asarray(mgr.state.params["w"]), before)
+
+
+def test_rollback_all_dirs_torn_is_honest_failure(tmp_path):
+    mgr = RecoveryManager.for_sim(seed=3, directory=str(tmp_path),
+                                  save_every=1)
+    mgr.on_window(0)
+    mgr.ckpt.wait()
+    (tmp_path / "step_0" / "meta.json").unlink()
+    out = mgr.rollback()
+    assert not out.ok and "no valid checkpoint" in out.error
+
+
+# -- the engine: real verbs, honest failure -----------------------------------
+
+def test_engine_checkpoint_now_actually_saves(tmp_path):
+    mgr = RecoveryManager.for_sim(seed=3, directory=str(tmp_path),
+                                  save_every=0)
+    eng = MitigationEngine(None, [], recovery=mgr)
+    for w in range(3):
+        eng.begin_window(w)
+    rec = eng.apply(MitigationPlan(Action.CHECKPOINT_NOW, [], "save"), 3)
+    assert rec.checkpoint_step == 3
+    mgr.ckpt.wait()
+    assert mgr.ckpt.latest_step() == 3
+
+
+def test_engine_rollback_restores_and_cures(tmp_path):
+    mgr = RecoveryManager.for_sim(seed=3, directory=str(tmp_path),
+                                  save_every=3)
+    sched = [ScheduledFault(F.LossSpike(), 0, 10)]
+    eng = MitigationEngine(None, sched, recovery=mgr)
+    for w in range(5):
+        eng.begin_window(w)
+    rec = eng.apply(MitigationPlan(Action.ROLLBACK_TO_CHECKPOINT, [],
+                                   "restore"), 4)
+    assert not rec.rollback_failed and rec.rollback_verified
+    assert rec.restored_step == 3 and rec.lost_steps == 2
+    assert rec.cured == ["LossSpike"]
+    assert eng.faults_at(5) == []
+
+
+def test_engine_failed_rollback_cures_nothing(tmp_path):
+    mgr = RecoveryManager.for_sim(seed=3, directory=str(tmp_path),
+                                  save_every=0)
+    sched = [ScheduledFault(F.LossSpike(), 0, 10)]
+    eng = MitigationEngine(None, sched, recovery=mgr)
+    for w in range(5):
+        eng.begin_window(w)
+    rec = eng.apply(MitigationPlan(Action.ROLLBACK_TO_CHECKPOINT, [],
+                                   "restore"), 4)
+    assert rec.rollback_failed and not rec.rollback_verified
+    assert rec.restored_step is None
+    assert rec.cured == []
+    assert [type(f).__name__ for f in eng.faults_at(5)] == ["LossSpike"]
+
+
+def test_bare_engine_keeps_label_cure_semantics():
+    """No recovery manager (worker-process replay engines, legacy callers):
+    ROLLBACK_TO_CHECKPOINT keeps its historical label-only cure."""
+    sched = [ScheduledFault(F.LossSpike(), 0, 10)]
+    eng = MitigationEngine(None, sched)
+    rec = eng.apply(MitigationPlan(Action.ROLLBACK_TO_CHECKPOINT, [],
+                                   "restore"), 4)
+    assert not rec.rollback_failed
+    assert rec.cured == ["LossSpike"]
+
+
+def test_scenario_rollback_without_checkpoints_escalates():
+    """End-to-end honest degradation: a numerics incident whose rollback
+    finds an empty checkpoint directory must NOT resolve — the cure is
+    skipped, verification fails, and the ladder runs dry honestly."""
+    rec = RecoveryManager.for_sim(seed=5, save_every=0)
+    runner, res = run_mitigated(
+        [ScheduledFault(F.LossSpike(), INJECT, 12)], n_windows=12,
+        recovery=rec)
+    inc = next(i for i in res.incidents if i.function == LOSS_FN)
+    assert inc.state == ESCALATED
+    rolls = [m for m in runner.engine.log
+             if m.plan.action is Action.ROLLBACK_TO_CHECKPOINT]
+    assert rolls and all(m.rollback_failed for m in rolls)
+    assert all(m.cured == [] for m in rolls)
+
+
+def test_scenario_rollback_with_checkpoints_resolves():
+    """The same scenario WITH a checkpoint cadence does real restores and
+    resolves: the auto-provisioned manager's side-car state round-trips
+    through disk (restored step + parameter equality on the engine log)."""
+    runner, res = run_mitigated(
+        [ScheduledFault(F.LossSpike(), INJECT, 12)], n_windows=12)
+    inc = next(i for i in res.incidents if i.function == LOSS_FN)
+    assert inc.state == RESOLVED
+    m = next(m for m in runner.engine.log
+             if m.plan.action is Action.ROLLBACK_TO_CHECKPOINT)
+    assert not m.rollback_failed and m.rollback_verified
+    assert m.restored_step is not None and m.lost_steps > 0
+    mgr = runner.engine.recovery
+    assert mgr is not None and mgr.saved_steps
+
+
+# -- chronic-fault memory -----------------------------------------------------
+
+def test_history_roundtrip_and_torn_line(tmp_path):
+    path = tmp_path / "incidents.jsonl"
+    h = IncidentHistory(path)
+    h.record("perf", GEMM, (3, 11), "resolved",
+             [{"action": "replace_hosts", "rung": 0, "ok": False},
+              {"action": "flag_code_for_optimization", "rung": 1, "ok": True}])
+    with path.open("a") as f:
+        f.write('{"channel": "perf", "torn')       # crashed writer
+    h2 = IncidentHistory(path)                     # reload from disk
+    assert len(h2.records) == 1
+    assert h2.successful_action("perf", GEMM, (11, 40)) == "flag_code_for_optimization"
+    assert h2.action_stats("perf", GEMM, (3,)) == {
+        "replace_hosts": (0, 1), "flag_code_for_optimization": (1, 0)}
+
+
+def test_history_matching_is_signature_overlap(tmp_path):
+    h = IncidentHistory(tmp_path / "i.jsonl")
+    h.record("perf", GEMM, (3, 11), "resolved",
+             [{"action": "flag_code_for_optimization", "rung": 0, "ok": True}])
+    assert h.successful_action("perf", GEMM, (11,)) == "flag_code_for_optimization"
+    assert h.successful_action("perf", GEMM, ()) == "flag_code_for_optimization"  # job-level
+    assert h.successful_action("perf", GEMM, (7,)) is None       # disjoint
+    assert h.successful_action("numerics", GEMM, (3,)) is None   # channel
+    assert h.successful_action("perf", "other.fn", (3,)) is None
+
+
+def test_history_rerank_moves_winner_first(tmp_path):
+    h = IncidentHistory(tmp_path / "i.jsonl")
+    plans = [MitigationPlan(Action.REPLACE_HOSTS, [3, 11], "drop"),
+             MitigationPlan(Action.FLAG_CODE, [], "flag")]
+    ranked, chronic = h.rerank(list(plans), "perf", GEMM, (3, 11))
+    assert [p.action for p in ranked] == [p.action for p in plans]
+    assert not chronic                              # empty store: no-op
+    h.record("perf", GEMM, (3, 11), "resolved",
+             [{"action": "replace_hosts", "rung": 0, "ok": False},
+              {"action": "flag_code_for_optimization", "rung": 1, "ok": True}])
+    ranked, chronic = h.rerank(list(plans), "perf", GEMM, (3, 11))
+    assert [p.action for p in ranked] == [Action.FLAG_CODE,
+                                          Action.REPLACE_HOSTS]
+    assert chronic
+
+
+def test_restarted_run_starts_at_the_rung_that_worked(tmp_path):
+    """The acceptance bar: run 1 learns (wrong plan first, one escalation,
+    flag_code cures); run 2 — a 'restarted job' sharing the history file —
+    re-ranks the fresh ladder and resolves at rung 0, zero escalations."""
+    path = tmp_path / "incidents.jsonl"
+    sched = [ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 14,
+                            cures=(Action.FLAG_CODE,))]
+    r1, res1 = run_mitigated(list(sched), n_windows=14,
+                             history=IncidentHistory(path))
+    inc1 = next(i for i in res1.incidents if i.function == GEMM)
+    assert inc1.state == RESOLVED and inc1.escalations == 1
+    assert not inc1.chronic
+    assert [p.action for _, p in inc1.applied] == [Action.REPLACE_HOSTS,
+                                                   Action.FLAG_CODE]
+    # run 2: cold restart, same store — the lesson survives the process
+    r2, res2 = run_mitigated(list(sched), n_windows=14,
+                             history=IncidentHistory(path))
+    inc2 = next(i for i in res2.incidents if i.function == GEMM)
+    assert inc2.state == RESOLVED and inc2.escalations == 0
+    assert inc2.chronic
+    assert [p.action for _, p in inc2.applied] == [Action.FLAG_CODE]
+    # both runs' GEMM incidents were recorded (side incidents may add more)
+    recs = [r for r in IncidentHistory(path).records
+            if r["function"] == GEMM]
+    assert len(recs) == 2
+    assert all(r["outcome"] == "resolved" for r in recs)
+
+
+def test_escalated_outcome_recorded_as_failures(tmp_path):
+    path = tmp_path / "incidents.jsonl"
+    run_mitigated([ScheduledFault(F.GpuThrottle(workers=(3, 11)), INJECT, 9,
+                                  cures=())], n_windows=13,
+                  history=IncidentHistory(path))
+    recs = IncidentHistory(path).records
+    assert recs and recs[-1]["outcome"] == "escalated"
+    assert all(not a["ok"] for a in recs[-1]["attempts"])

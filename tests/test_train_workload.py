@@ -164,6 +164,43 @@ def test_gc_pause_on_subset_plans_gc_synchronization(wl4):
     _incident(res, "runtime.gc", (0, 1, 2), Action.SYNCHRONIZE_GC)
 
 
+def test_param_corruption_resolved_by_real_rollback(wl4):
+    """DESIGN.md §14 on the REAL trainer: a live numerics fault (corrupted
+    params, NaN planted) diverges actual jit'd training; the numerics
+    incident's ROLLBACK_TO_CHECKPOINT rung restores the window-0 on-disk
+    checkpoint into the running trainers (parameter-equality verified) and
+    the incident resolves because the loss genuinely came back."""
+    from repro.ckpt import RecoveryManager
+    from repro.train.workload import ParamCorruption
+    n_win = 8
+    # save only at window 0: the periodic cadence must not checkpoint the
+    # corrupted state the rollback is supposed to erase
+    rec = RecoveryManager.for_workload(wl4, save_every=n_win)
+    fault = ParamCorruption(workers=(1,), nan=True)
+    r = ScenarioRunner(
+        None, [ScheduledFault(fault, 2, n_win,
+                              cures=(Action.ROLLBACK_TO_CHECKPOINT,))],
+        n_windows=n_win, iters_per_window=IPW,
+        detector_cfg=default_trainer_detector_cfg(IPW), workload=wl4,
+        mitigation=True, recovery=rec)
+    res = r.run()
+    inc = next(i for i in res.incidents
+               if i.channel == "numerics" and i.applied)
+    assert inc.state == "resolved"
+    assert inc.applied[0][1].action is Action.ROLLBACK_TO_CHECKPOINT
+    # the rollback was REAL: a step restored from disk, verified equal to
+    # the saved arrays, with the diverged iterations honestly discarded
+    m = next(m for m in r.engine.log
+             if m.plan.action is Action.ROLLBACK_TO_CHECKPOINT)
+    assert not m.rollback_failed and m.rollback_verified
+    assert m.restored_step is not None and m.lost_steps > 0
+    # and the live params really are healthy again (the NaN is gone)
+    import jax
+    for tw in wl4.workers:
+        for leaf in jax.tree_util.tree_leaves(tw.params):
+            assert np.isfinite(np.asarray(jax.device_get(leaf))).all()
+
+
 # -- fleet/wire parity on real profiles ---------------------------------------
 
 def _assert_identical(a, b):

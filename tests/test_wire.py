@@ -190,6 +190,34 @@ def test_collector_tolerates_dropped_uploads():
     np.testing.assert_array_equal(mask, [True, False, True, False, True])
 
 
+def test_anchors_frame_slo_parity():
+    """ISSUE 10 satellite: the ``slo`` field rides the anchors frame with
+    the same present-only-when-provided contract ``numerics`` has — a
+    workload without the stream produces BYTE-identical frames to the
+    historical format, and the collector parses it into ``batch.slo``."""
+    durs = [0.5, 0.6]
+    pairs = [(0.21, 0.013), (0.19, 0.011)]
+    msg = framing.anchors_msg(3, 7, durs, slo=pairs)
+    (back,) = decode_frames(encode_frame(msg))
+    assert back["slo"] == [[0.21, 0.013], [0.19, 0.011]]
+    assert "numerics" not in back
+    # absent stream -> byte-identical legacy frame
+    legacy = framing.anchors_msg(3, 7, durs)
+    assert "slo" not in legacy and "numerics" not in legacy
+    assert encode_frame(legacy) == encode_frame(
+        {"t": "anchors", "window": 3, "worker": 7, "durs": durs})
+    # collector side: slo lands beside anchors/numerics, first copy wins
+    collector = WindowCollector([7])
+    collector.on_message(msg)
+    collector.on_message(framing.anchors_msg(3, 7, [9.9], slo=[(1.0, 1.0)]))
+    collector.on_message({"t": "window_end", "window": 3, "worker": 7,
+                          "sent": 1, "dropped": 0})
+    batch = collector.wait_window(3, timeout=1.0)
+    assert batch.anchors[7] == durs
+    assert batch.slo == {7: pairs}
+    assert batch.numerics == {}
+
+
 def test_collector_timeout_reports_never_ended_worker():
     collector = WindowCollector([0, 1])
     collector.on_message({"t": "window_end", "window": 0, "worker": 0,
